@@ -1,0 +1,87 @@
+"""Shared benchmark scaffolding.
+
+Profiles scale the paper's 10 GB FD : 100 GB SD testbed down to
+laptop-size while keeping every *ratio* (FD:SD = 1:10, DB ~110% of the
+hierarchy, block 16 KiB, bloom 10 bits/key, hot set 5%).  Loaded DBs are
+pickled once per (system, record size) and cloned per cell, and storage
+accounting is reset after load so throughput reflects the run phase only
+(the paper reports the final 10% of the run phase).
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import sys
+import time
+
+from repro.core import LSMConfig
+from repro.core.baselines import make_system
+from repro.core.runner import db_key_count, load_db, run_workload
+from repro.core.storage import MIB
+
+PROFILES = {
+    "quick":   dict(fd=4 * MIB, sd=40 * MIB, sstable=256 * 1024, n_ops=25_000),
+    "default": dict(fd=8 * MIB, sd=80 * MIB, sstable=256 * 1024, n_ops=50_000),
+    "full":    dict(fd=32 * MIB, sd=320 * MIB, sstable=512 * 1024,
+                    n_ops=200_000),
+}
+
+
+def profile_name() -> str:
+    for flag in ("--quick", "--full"):
+        if flag in sys.argv:
+            return flag[2:]
+    return os.environ.get("REPRO_BENCH_PROFILE", "default")
+
+
+def make_cfg(profile: str | None = None, **kw) -> LSMConfig:
+    p = PROFILES[profile or profile_name()]
+    cfg = LSMConfig(fd_size=p["fd"], sd_size=p["sd"],
+                    target_sstable_bytes=p["sstable"],
+                    memtable_bytes=p["sstable"],
+                    block_cache_bytes=max(p["fd"] // 64, 64 * 1024))
+    for k, v in kw.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def n_ops(profile: str | None = None) -> int:
+    return PROFILES[profile or profile_name()]["n_ops"]
+
+
+class LoadedDBCache:
+    """Load once per (system, value_len), clone per benchmark cell."""
+
+    def __init__(self):
+        self._blobs: dict[tuple, bytes] = {}
+
+    def get(self, system: str, cfg: LSMConfig, value_len: int, seed: int = 0):
+        key = (system, cfg.fd_size, cfg.sd_size, value_len, seed)
+        if key not in self._blobs:
+            db = make_system(system, cfg, seed=seed)
+            nk = db_key_count(cfg, value_len)
+            load_db(db, nk, value_len, seed)
+            buf = io.BytesIO()
+            pickle.dump((db, nk), buf, protocol=pickle.HIGHEST_PROTOCOL)
+            self._blobs[key] = buf.getvalue()
+        db, nk = pickle.loads(self._blobs[key])
+        db.reset_storage()
+        return db, nk
+
+
+DB_CACHE = LoadedDBCache()
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """The harness CSV contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.wall = time.time() - self.t0

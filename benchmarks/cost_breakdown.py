@@ -1,0 +1,52 @@
+"""Paper Figures 12-14: CPU/I-O breakdown and device-throughput shift.
+
+Reports per-component simulated I/O (get / compaction / flush / ralt /
+promotion / checker) and verifies the paper's claims: RALT is a small
+share of total I/O (5.5-12.7% in the paper), and HotRAP's Get I/O
+migrates from SD to FD over the run (Fig. 14).
+"""
+from __future__ import annotations
+
+from repro.core.runner import run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import DB_CACHE, emit, make_cfg, n_ops
+
+
+def main(quick: bool = False):
+    cfg = make_cfg()
+    for dist_kind in (["hotspot"] if quick else ["hotspot", "uniform"]):
+        for system in ["hotrap", "rocksdb_tiered", "rocksdb_fd"]:
+            db, nk = DB_CACHE.get(system, cfg, 200)
+            dist = KeyDist(dist_kind, nk)
+            wl = ycsb("RW", dist, n_ops(), 200, seed=17)
+            res = run_workload(db, wl, name=system, collect_latency=False)
+            comps = res.storage["components"]
+            total = sum(c["read_bytes"] + c["write_bytes"]
+                        for c in comps.values()) or 1
+            parts = ";".join(
+                f"{k}={100*(v['read_bytes']+v['write_bytes'])/total:.1f}%"
+                for k, v in sorted(comps.items()))
+            emit(f"fig12_13/{dist_kind}/{system}", 0.0, parts)
+            if system == "hotrap":
+                ralt = comps.get("ralt", {"read_bytes": 0, "write_bytes": 0})
+                share = (ralt["read_bytes"] + ralt["write_bytes"]) / total
+                emit(f"fig12_13/{dist_kind}/ralt_io_share", 0.0,
+                     f"{100*share:.1f}%")
+    # Fig. 14: FD-served Get fraction early vs late in the run
+    db, nk = DB_CACHE.get("hotrap", cfg, 1000)
+    dist = KeyDist("hotspot", nk)
+    wl = ycsb("RW", dist, n_ops(), 1000, seed=19)
+    third = len(wl.ops) // 3
+    from repro.data.workloads import Workload
+    r1 = run_workload(db, Workload(wl.ops[:third], wl.keys[:third], 1000),
+                      name="hotrap", collect_latency=False)
+    early = db.stats.fd_hit_rate
+    run_workload(db, Workload(wl.ops[third:], wl.keys[third:], 1000),
+                 name="hotrap", collect_latency=False)
+    late = db.stats.fd_hit_rate
+    emit("fig14/fd_get_share", 0.0, f"early={early:.3f};late={late:.3f}")
+
+
+if __name__ == "__main__":
+    main()

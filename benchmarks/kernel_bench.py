@@ -1,0 +1,94 @@
+"""Kernel micro-bench: Pallas (interpret) vs jnp reference wall time on
+CPU + the *analytic* TPU projection from tile shapes.
+
+Interpret-mode wall times are NOT TPU performance — the value of this
+section is (a) correctness at benchmark shapes and (b) the VMEM/MXU
+roofline sanity of the chosen block shapes, printed per kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def timeit(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters
+
+
+def main(quick: bool = False):
+    S = 256 if quick else 512
+    B, H, KVH, D = 1, 4, 2, 64
+    q = jax.random.normal(jax.random.key(0), (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.key(1), (B, S, KVH, D), jnp.float32)
+    v = jax.random.normal(jax.random.key(2), (B, S, KVH, D), jnp.float32)
+
+    t_ref = timeit(lambda a, b, c: ref.flash_attention_ref(a, b, c),
+                   q, k, v)
+    t_pal = timeit(lambda a, b, c: ops.flash_attention(
+        a, b, c, block_q=128, block_k=128, interpret=True), q, k, v)
+    err = float(jnp.abs(
+        ops.flash_attention(q, k, v, block_q=128, block_k=128,
+                            interpret=True)
+        - ref.flash_attention_ref(q, k, v)).max())
+    vmem_kib = (128 * D * 4 * 2 + 128 * D * 4 + 128 * 128 * 4) / 1024
+    print(f"flash_attention,{t_pal * 1e6:.0f},interp_us "
+          f"ref_us={t_ref * 1e6:.0f} max_err={err:.1e} "
+          f"tile_vmem={vmem_kib:.0f}KiB", flush=True)
+
+    qd = jax.random.normal(jax.random.key(3), (B, H, D), jnp.float32)
+    t_ref = timeit(lambda a, b, c: ref.decode_attention_ref(a, b, c, S),
+                   qd, k, v)
+    t_pal = timeit(lambda a, b, c: ops.decode_attention(
+        a, b, c, jnp.int32(S), block_s=128, interpret=True), qd, k, v)
+    err = float(jnp.abs(
+        ops.decode_attention(qd, k, v, jnp.int32(S), block_s=128,
+                             interpret=True)
+        - ref.decode_attention_ref(qd, k, v, S)).max())
+    print(f"decode_attention,{t_pal * 1e6:.0f},interp_us "
+          f"ref_us={t_ref * 1e6:.0f} max_err={err:.1e} "
+          f"bw_bound=True", flush=True)
+
+    N = 4096 if quick else 65536
+    rng = np.random.default_rng(0)
+    ticks = jnp.asarray(rng.integers(0, 50, N), jnp.int32)
+    scores = jnp.asarray(rng.random(N), jnp.float32)
+    hits = jnp.asarray(rng.integers(0, 2, N), jnp.int8)
+    t_pal = timeit(lambda a, b, c: ops.ralt_update(
+        a, b, c, 60, 0.5, interpret=True)[1], ticks, scores, hits)
+    nt, ns, _ = ops.ralt_update(ticks, scores, hits, 60, 0.5,
+                                interpret=True)
+    wt, ws = ref.ralt_update_ref(ticks, scores, hits, 60, 0.999)
+    err = float(jnp.abs(ns - ws).max())
+    print(f"ralt_update,{t_pal * 1e6:.0f},interp_us n={N} "
+          f"max_err={err:.1e} fused_passes=1", flush=True)
+
+    Bz, nC, Q, nh, hp, ns_ = 1, 4, 64, 2, 64, 64
+    x = jax.random.normal(jax.random.key(4), (Bz, nC, Q, nh, hp)) * 0.3
+    Bm = jax.random.normal(jax.random.key(5), (Bz, nC, Q, ns_)) * 0.3
+    Cm = jax.random.normal(jax.random.key(6), (Bz, nC, Q, ns_)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(jax.random.key(7),
+                                           (Bz, nC, Q, nh)))
+    A = -jnp.exp(jax.random.normal(jax.random.key(8), (nh,)) * 0.1)
+    t_pal = timeit(lambda *a: ops.ssd_scan(*a, interpret=True)[0],
+                   x, Bm, Cm, dt, A)
+    y, h = ops.ssd_scan(x, Bm, Cm, dt, A, interpret=True)
+    wy, wh = ref.ssd_chunk_ref(x, Bm, Cm, dt, A,
+                               jnp.zeros((Bz, nh, ns_, hp)))
+    err = float(jnp.abs(y - wy).max())
+    print(f"ssd_scan,{t_pal * 1e6:.0f},interp_us max_err={err:.1e} "
+          f"state_vmem={(ns_ * hp * 4) / 1024:.0f}KiB", flush=True)
+
+
+if __name__ == "__main__":
+    main()

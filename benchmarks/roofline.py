@@ -1,0 +1,104 @@
+"""Roofline table (deliverable g): aggregates the dry-run JSONs under
+experiments/dryrun into the per-(arch x shape x mesh) three-term table.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+
+Terms (seconds/step, TPU v5e):
+    compute    = parsed HLO dot/conv FLOPs per device / 197 TF/s
+    memory     = fusion-boundary HBM bytes per device / 819 GB/s
+    collective = ring-model wire bytes per device / 50 GB/s
+plus MODEL_FLOPS = 6*N(_active)*D, the useful-flops ratio, the dominant
+term, and the roofline fraction = compute / max(all three) (how close
+the cell is to being compute-bound at peak).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(path) as f:
+            recs.append((os.path.basename(path), json.load(f)))
+    return recs
+
+
+def fraction(rec) -> float:
+    t = rec["roofline_terms_s"]
+    peak = max(t["compute"], t["memory"], t["collective"])
+    # useful fraction of peak-FLOP time within the bottleneck term
+    useful = rec["model_flops_global"] / rec["n_chips"] / 197e12
+    return useful / peak if peak else 0.0
+
+
+def note_for(r) -> str:
+    """One sentence: what would move the dominant term down."""
+    t = r["roofline_terms_s"]
+    b = r["bottleneck"]
+    shape = r.get("shape", "")
+    coll = r.get("collective_by_kind", {})
+    if b == "collective":
+        top = max(coll, key=coll.get) if coll else "?"
+        if "decode" in shape or "long" in shape:
+            return (f"dominant {top}: batch more tokens per step "
+                    f"(speculative/multi-token decode) or quantize the "
+                    f"moved buffers to 8-bit")
+        if top == "all-gather":
+            return ("FSDP weight gathers: overlap with compute "
+                    "(latency-hiding scheduler) or 8-bit weight "
+                    "gathers; raising per-device batch amortizes them")
+        return (f"dominant {top}: activation partials — on TPU bf16 "
+                f"reduces are native (CPU dump promotes to f32, ~2x "
+                f"pessimistic); next lever is a larger microbatch")
+    if b == "memory":
+        if "decode" in shape or "long" in shape:
+            return ("decode is cache-bandwidth-bound by design: 8-bit "
+                    "KV cache halves it; the Pallas decode kernel "
+                    "streams the cache exactly once")
+        return ("jnp attention/SSD tile traffic: the Pallas "
+                "flash/ssd kernels keep tiles in VMEM (f32 converts "
+                "in the dump are CPU-only, bf16 is MXU-native)")
+    return ("compute-bound: increase MXU utilization via tile-size "
+            "tuning; check useful-flops ratio for remat overhead")
+
+
+def main(quick: bool = False, dir_: str = "experiments/dryrun",
+         notes: bool = True):
+    recs = load(dir_)
+    if not recs:
+        print("# no dry-run records found; run repro.launch.dryrun "
+              "--all first", flush=True)
+        return
+    hdr = (f"{'cell':58s} {'recipe':7s} {'comp_s':>8s} {'mem_s':>8s} "
+           f"{'coll_s':>8s} {'args':>7s} {'temp*':>7s} {'bound':>7s} "
+           f"{'useful':>7s} {'RLfrac':>7s}")
+    print(hdr, flush=True)
+    for name, r in recs:
+        if r.get("status") == "SKIP":
+            print(f"{r['cell']:58s} SKIP ({r['reason'][:40]}...)",
+                  flush=True)
+            continue
+        t = r["roofline_terms_s"]
+        mem = r.get("memory_analysis", {})
+        args_g = mem.get("argument_size_in_bytes", 0) / 2**30
+        temp_g = mem.get("temp_tpu_corrected",
+                         mem.get("temp_size_in_bytes", 0)) / 2**30
+        print(f"{r['cell']:58s} {r.get('recipe', '?'):7s} "
+              f"{t['compute']:8.3f} {t['memory']:8.3f} "
+              f"{t['collective']:8.3f} {args_g:6.2f}G {temp_g:6.2f}G "
+              f"{r['bottleneck'][:7]:>7s} "
+              f"{r['useful_flops_ratio']:7.3f} {fraction(r):7.3f}",
+              flush=True)
+        if notes:
+            print(f"    -> {note_for(r)}", flush=True)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    a = ap.parse_args()
+    main(dir_=a.dir)

@@ -1,0 +1,62 @@
+"""Benchmark harness entry point.  One section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick|--full] [names...]
+
+Prints `name,us_per_call,derived` CSV lines.  `--quick` shrinks the
+simulated DB and op counts; default profile matches the paper's ratios
+at laptop scale.  Optional positional names select a subset, e.g.
+`python -m benchmarks.run ycsb ablations`.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from . import (ablations, cost_breakdown, dynamic_workload, ralt_micro,
+               tail_latency, twitter_traces, wa_tuning, ycsb_throughput)
+
+SECTIONS = [
+    ("ycsb", ycsb_throughput.main),          # Fig. 6 & 7
+    ("tail", tail_latency.main),             # Fig. 8
+    ("twitter", twitter_traces.main),        # Fig. 9-11
+    ("breakdown", cost_breakdown.main),      # Fig. 12-14
+    ("ablations", ablations.main),           # Tables 3 & 4
+    ("dynamic", dynamic_workload.main),      # Fig. 15
+    ("ralt", ralt_micro.main),               # §3.2
+    ("wa", wa_tuning.main),                  # §3.6
+]
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if not a.startswith("-")]
+    quick = "--quick" in sys.argv
+    selected = [(n, f) for n, f in SECTIONS if not args or n in args]
+    # kernel/serving benches are appended lazily (they need jax)
+    if not args or "kernels" in args or "serving" in args:
+        try:
+            from . import kernel_bench, tiered_serving
+            if not args or "kernels" in args:
+                selected.append(("kernels", kernel_bench.main))
+            if not args or "serving" in args:
+                selected.append(("serving", tiered_serving.main))
+        except ImportError:
+            pass
+    failures = []
+    for name, fn in selected:
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn(quick=quick)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# === {name} done in {time.time() - t0:.1f}s ===",
+              flush=True)
+    if failures:
+        print(f"# FAILED sections: {failures}", flush=True)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

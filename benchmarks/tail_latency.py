@@ -1,0 +1,29 @@
+"""Paper Figure 8: Get tail latency under hotspot-5%, 1 KiB records.
+
+HotRAP serves most reads from FD => the p99/p999 tail (dominated by SD
+random reads in tiered baselines) collapses toward the FD latency.
+"""
+from __future__ import annotations
+
+from repro.core.runner import run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import DB_CACHE, emit, make_cfg, n_ops
+
+SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap", "sas_cache"]
+
+
+def main(quick: bool = False):
+    cfg = make_cfg()
+    for mix in (["RO"] if quick else ["RO", "RW"]):
+        for system in SYSTEMS:
+            db, nk = DB_CACHE.get(system, cfg, 1000)
+            dist = KeyDist("hotspot", nk)
+            wl = ycsb(mix, dist, n_ops(), 1000, seed=11)
+            res = run_workload(db, wl, name=system)
+            emit(f"fig8/{mix}/{system}/p99", res.p99 * 1e6,
+                 f"p999={res.p999 * 1e6:.1f}us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Tiered-KV / expert / embedding serving benchmark (the paper's §4
+adapted to the TPU tiers; simulated device times, v5e HBM vs PCIe).
+
+Systems compared at the page level (mirrors the paper's baselines):
+  all-fast      everything in HBM (RocksDB-FD analogue; upper bound)
+  no-promotion  pages stay where written (RocksDB-tiered analogue)
+  seq-swap      whole-sequence granularity swapping (Mutant analogue,
+                limitation 2: cold pages piggybacked with hot)
+  hotrap        RALT-tracked page-granular retention + promotion
+
+Workloads: hotspot-5%/zipfian/uniform page skew + a hotspot-shift
+phase (paper Fig. 15 analogue).  Reported: simulated time, hit rate,
+promotion traffic.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tiering import KVTierConfig, TieredKVCache
+from repro.tiering.kvcache import HBM_BW, PCIE_BW
+
+
+def make_kv(n_pages, fast_slots, **kw):
+    cfg = KVTierConfig(n_pages=n_pages, fast_slots=fast_slots,
+                       page_tokens=16, kv_heads=4, head_dim=32,
+                       staging_slots=16, sweep_every=64, **kw)
+    kv = TieredKVCache(cfg)
+    z = np.zeros((1, cfg.page_tokens, cfg.kv_heads, cfg.head_dim),
+                 np.float32)
+    for p in range(n_pages):
+        kv.write_page(p, z, z)
+    kv.clock.pcie_s = kv.clock.hbm_s = 0.0      # don't count the load
+    return kv
+
+
+def access_stream(kind, n_pages, n_ops, seed=0, shift_at=None):
+    rng = np.random.default_rng(seed)
+    hot_lo = 0
+    for i in range(n_ops):
+        if shift_at and i == shift_at:
+            hot_lo = n_pages // 2               # hotspot shift
+        if kind == "hotspot":
+            n_hot = max(n_pages // 20, 1)
+            p = hot_lo + int(rng.integers(0, n_hot)) \
+                if rng.random() < 0.95 else int(rng.integers(0, n_pages))
+        elif kind == "zipf":
+            p = (hot_lo + min(int(rng.zipf(1.2)) - 1, n_pages - 1)) \
+                % n_pages
+        else:
+            p = int(rng.integers(0, n_pages))
+        yield p % n_pages
+
+
+def run_system(system, kind, n_pages=256, fast=32, n_ops=4000,
+               shift_at=None):
+    kv = make_kv(n_pages, fast)
+    if system == "all-fast":
+        # upper bound: charge HBM for everything
+        page_b = kv.cfg.page_bytes
+        n = 0
+        for _ in access_stream(kind, n_pages, n_ops, shift_at=shift_at):
+            n += 1
+        return dict(sim_s=n * page_b / HBM_BW, hit=1.0, promoted=0)
+    if system == "no-promotion":
+        kv._promote = lambda *a, **k: False
+        kv.sweep = lambda: None
+        kv._maybe_flush = lambda: None
+    if system == "seq-swap":
+        # sequence granularity: promotion moves 8-page blocks; the
+        # block is chosen by the accessed page (cold neighbours ride
+        # along and evict other residents) — limitation 2
+        orig = kv._promote
+
+        def block_promote(page, ver, hot):
+            base = (page // 8) * 8
+            ok = False
+            for p in range(base, min(base + 8, kv.cfg.n_pages)):
+                if kv.tier[p] == kv.TIER_SLOW:
+                    ok |= bool(orig(p, int(kv.version[p]), hot))
+            return ok
+        kv._promote = block_promote
+    for p in access_stream(kind, n_pages, n_ops, shift_at=shift_at):
+        kv.read_pages([p])
+    return dict(sim_s=kv.clock.total_s, hit=kv.fast_hit_rate(),
+                promoted=kv.clock.promoted)
+
+
+def main(quick: bool = False):
+    n_ops = 1500 if quick else 4000
+    for kind in ("hotspot", "zipf", "uniform"):
+        rows = {}
+        for system in ("all-fast", "hotrap", "seq-swap", "no-promotion"):
+            r = run_system(system, kind, n_ops=n_ops)
+            rows[system] = r
+            print(f"kv_{kind}_{system},{r['sim_s'] * 1e6 / n_ops:.3f},"
+                  f"hit={r['hit']:.3f} promoted={r['promoted']}",
+                  flush=True)
+        base = rows["no-promotion"]["sim_s"]
+        print(f"kv_{kind}_speedup,{base / rows['hotrap']['sim_s']:.2f},"
+              f"hotrap_over_no_promotion", flush=True)
+    # hotspot shift (Fig. 15 analogue)
+    r = run_system("hotrap", "hotspot", n_ops=n_ops,
+                   shift_at=n_ops // 2)
+    print(f"kv_shift_hotrap,{r['sim_s'] * 1e6 / n_ops:.3f},"
+          f"hit={r['hit']:.3f} (recovers after shift)", flush=True)
+
+    # embedding rows (zipf vocab) + expert cache
+    from repro.tiering import TieredEmbedding, ExpertCache
+    rng = np.random.default_rng(0)
+    V, d = 4096, 64
+    table = rng.standard_normal((V, d)).astype(np.float32)
+    emb = TieredEmbedding(table, fast_rows=512, staging_slots=64)
+    for _ in range(200 if quick else 400):
+        ids = np.minimum(rng.zipf(1.3, 64) - 1, V - 1)
+        emb.lookup(ids)
+    print(f"embedding_zipf,{emb.clock.total_s * 1e6:.1f},"
+          f"hit={emb.fast_hit_rate():.3f} promoted={emb.clock.promoted}",
+          flush=True)
+
+    E = 64
+    ec = ExpertCache(rng.standard_normal((E, 32, 32)).astype(np.float32),
+                     fast_experts=16, swap_every=8)
+    counts = None
+    for _ in range(150 if quick else 300):
+        e_ids = np.minimum(rng.zipf(1.4, 128) - 1, E - 1)
+        counts = np.bincount(e_ids, minlength=E)
+        ec.route(counts)
+    print(f"expert_zipf,{ec.clock.total_s * 1e6:.1f},"
+          f"resident_frac={ec.resident_fraction(counts):.3f}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Figures 6 & 7: YCSB throughput across systems, mixes, skews.
+
+Fig. 6 — 1 KiB records (24 B key + 1000 B value), RO/RW/WH/UH ×
+{hotspot-5%, zipfian, uniform}.  Fig. 7 — 200 B records (176 B value),
+representative subset (the paper also shows a subset "since trends are
+similar").  Derived column: throughput (ops/s, simulated) and FD hit
+rate.
+"""
+from __future__ import annotations
+
+from repro.core.runner import run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import DB_CACHE, emit, make_cfg, n_ops
+
+ALL_SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap", "mutant",
+               "sas_cache", "prismdb"]
+CORE_SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap"]
+DISTS = ["hotspot", "zipfian", "uniform"]
+MIXES_FULL = ["RO", "RW"]          # all systems
+MIXES_CORE = ["WH", "UH"]          # core systems (paper: HotRAP competitive)
+
+
+def run(value_len: int = 1000, tag: str = "fig6",
+        dists=DISTS, quick: bool = False) -> dict:
+    cfg = make_cfg()
+    results = {}
+    cells = [(m, s) for m in MIXES_FULL for s in ALL_SYSTEMS]
+    if not quick:
+        cells += [(m, s) for m in MIXES_CORE for s in CORE_SYSTEMS]
+    for dist_kind in dists:
+        for mix, system in cells:
+            db, nk = DB_CACHE.get(system, cfg, value_len)
+            dist = KeyDist(dist_kind, nk)
+            wl = ycsb(mix, dist, n_ops(), value_len, seed=7)
+            res = run_workload(db, wl, name=system)
+            us = 1e6 / max(res.throughput, 1e-9)
+            emit(f"{tag}/{dist_kind}/{mix}/{system}", us,
+                 f"thr={res.throughput:.0f}ops/s;hit={res.fd_hit_rate:.3f}")
+            results[(dist_kind, mix, system)] = res
+    # headline speedups (paper: 5.4x RO / 3.8x RW over second best)
+    for mix in MIXES_FULL:
+        for dist_kind in dists:
+            rs = {s: results[(dist_kind, mix, s)].throughput
+                  for s in ALL_SYSTEMS
+                  if (dist_kind, mix, s) in results}
+            if "hotrap" not in rs:
+                continue
+            others = {s: t for s, t in rs.items()
+                      if s not in ("hotrap", "rocksdb_fd")}
+            second = max(others.values())
+            emit(f"{tag}/{dist_kind}/{mix}/speedup_vs_second_best", 0.0,
+                 f"x{rs['hotrap'] / max(second, 1e-9):.2f}")
+    return results
+
+
+def main(quick: bool = False):
+    run(1000, "fig6", quick=quick)
+    if not quick:
+        run(200, "fig7", dists=["hotspot"], quick=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver (deliverable b): train a ~100M-param llama-family
+model for a few hundred steps with the full production substrate —
+pjit sharding, AdamW + cosine schedule, grad accumulation, rolling
+async checkpoints, straggler monitor, deterministic data pipeline.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py \
+        [--steps 300] [--ckpt-dir /tmp/tiny_lm_ckpt]
+
+On an 8-device host this runs a (4, 2) ("data", "model") mesh; on the
+CPU container it runs single-device (same code path, mesh (1, 1)).
+Loss should fall well below the unigram entropy of the synthetic
+mixture (the pipeline plants learnable n-gram motifs).
+"""
+import argparse
+
+from repro.launch.train import train
+from repro.launch.steps import TrainOptions
+from repro.models.config import Block, ModelConfig
+
+
+def tiny_llama_100m() -> ModelConfig:
+    return ModelConfig(
+        name="tiny-llama-100m",
+        d_model=640, n_heads=10, n_kv_heads=2, head_dim=64,
+        d_ff=1792, vocab=8192,
+        stages=((12, (Block("attn"),)),),
+        rope_theta=500_000.0,
+        dtype="float32",
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatch", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/tiny_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = tiny_llama_100m()
+    print(f"[tiny-lm] params ~{cfg.param_count() / 1e6:.0f}M")
+    topts = TrainOptions(total_steps=args.steps, warmup_steps=20,
+                         microbatch=args.microbatch)
+    _, _, hist = train(cfg, steps=args.steps,
+                       global_batch=args.global_batch,
+                       seq_len=args.seq_len, topts=topts,
+                       ckpt_dir=args.ckpt_dir, ckpt_every=50,
+                       resume=args.resume, log_every=10)
+    first, last = hist["loss"][0], hist["loss"][-1]
+    print(f"[tiny-lm] loss {first:.3f} -> {last:.3f} "
+          f"({len(hist['straggler_steps'])} straggler steps)")
+    assert last < first, "training must reduce loss"
+
+
+if __name__ == "__main__":
+    main()

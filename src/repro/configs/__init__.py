@@ -1,0 +1,49 @@
+"""Assigned-architecture registry.
+
+One module per architecture (``src/repro/configs/<id>.py``), each
+exporting ``CONFIG: ModelConfig`` with the exact pool configuration.
+``get_config("llama3-8b")`` resolves pool ids (dashes) to modules
+(underscores).  ``shapes.py`` defines the four assigned input shapes and
+``input_specs()`` (ShapeDtypeStruct stand-ins — no allocation).
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+from .shapes import SHAPES, ShapeSpec, input_specs  # noqa: F401
+
+ARCH_IDS = (
+    "musicgen-large",
+    "stablelm-3b",
+    "llama3-8b",
+    "minitron-8b",
+    "gemma3-4b",
+    "mamba2-1.3b",
+    "zamba2-7b",
+    "internvl2-1b",
+    "qwen3-moe-235b-a22b",
+    "mixtral-8x22b",
+)
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCH_IDS and _module_name(arch_id) not in [
+            _module_name(a) for a in ARCH_IDS]:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f".{_module_name(arch_id)}", __package__)
+    return mod.CONFIG
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f".{_module_name(arch_id)}", __package__)
+    return mod.smoke()
+
+
+def all_configs() -> dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,50 @@
+"""The paper's own configuration (HotRAP §4.1 testbed, scaled).
+
+Not an LM architecture: this is the tiered key-value store the paper
+evaluates.  The dataclass mirrors the paper's experimental setup (FD:SD
+= 1:10, Table 1 device model, 16 KiB blocks, RALT initial limits 50% /
+15% of FD) at laptop scale, and is consumed by `repro.core` runners,
+the benchmarks, and `examples/hotrap_kv_store.py`.  The TPU serving
+analogue (tiered KV-cache / expert / embedding caches) reads the same
+ratios via `tiering_defaults()`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..core import LSMConfig
+from ..core.storage import MIB
+
+
+@dataclasses.dataclass(frozen=True)
+class HotrapKVConfig:
+    fd_size: int = 16 * MIB
+    sd_size: int = 160 * MIB          # paper ratio 1:10
+    target_sstable_bytes: int = 256 * 1024
+    value_len: int = 1000             # paper's 1 KiB records (24B keys)
+    hot_set_init_frac: float = 0.50   # of FD (paper §4.1)
+    ralt_phys_frac: float = 0.15      # of FD (paper §4.1)
+
+
+CONFIG = HotrapKVConfig()
+
+
+def lsm_config(c: HotrapKVConfig = CONFIG) -> LSMConfig:
+    return LSMConfig(
+        fd_size=c.fd_size, sd_size=c.sd_size,
+        target_sstable_bytes=c.target_sstable_bytes,
+        memtable_bytes=c.target_sstable_bytes,
+        block_cache_bytes=max(c.fd_size // 64, 64 * 1024),
+    )
+
+
+def tiering_defaults(fast_slots: int) -> dict:
+    """Paper ratios mapped onto the TPU tiered caches (repro.tiering)."""
+    return dict(
+        hot_limit_init=int(0.50 * fast_slots),
+        hot_limit_lo=max(int(0.05 * fast_slots), 1),    # L_hs
+        hot_limit_hi=int(0.70 * fast_slots),            # R_hs
+        beta=0.10,                                      # eviction fraction
+        gamma=0.001, alpha=0.999,                       # time slices
+        delta_c=2.6, c_max=5,                           # Alg. 1
+    )

@@ -1,0 +1,71 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+The four LM shapes (seq_len x global_batch).  ``train_4k`` lowers
+``train_step``; ``prefill_32k`` lowers ``prefill_step``; ``decode_32k`` /
+``long_500k`` lower ``serve_step`` (one new token against a KV cache of
+seq_len).  ``long_500k`` requires a sub-quadratic architecture
+(``cfg.subquadratic``) — pure full-attention archs report SKIP
+(DESIGN.md #5).
+
+Everything here returns `jax.ShapeDtypeStruct`s: weak-type-correct,
+shardable, and never allocates device memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+
+# frontend stub prefix lengths (precomputed frame/patch embeddings)
+FRONTEND_LEN = {"audio": 64, "vision": 256}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k":    ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k":   ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    """long_500k is only defined for sub-quadratic architectures."""
+    if shape.name == "long_500k":
+        return cfg.subquadratic
+    return True
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    B, S = shape.batch, shape.seq
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "decode":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B,), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    else:
+        raise ValueError(shape.kind)
+    if cfg.frontend and shape.kind in ("train", "prefill"):
+        P = FRONTEND_LEN[cfg.frontend]
+        specs["frontend_emb"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), dt)
+    return specs

@@ -1,0 +1,12 @@
+"""HotRAP core: the paper's contribution as a reusable library.
+
+Public API:
+    LSMConfig, TieredLSM      — the engine (core/lsm.py)
+    RALT, RaltConfig          — the hotness tracker (core/ralt.py)
+    make_system, SYSTEMS      — paper baselines (core/baselines.py)
+    StorageSim                — simulated tiered devices (core/storage.py)
+"""
+from .lsm import LSMConfig, TieredLSM          # noqa: F401
+from .ralt import RALT, RaltConfig             # noqa: F401
+from .baselines import SYSTEMS, make_system    # noqa: F401
+from .storage import StorageSim                # noqa: F401

@@ -1,0 +1,277 @@
+"""Compared systems (paper §4.1).
+
+Every baseline reuses the same LSM engine so that differences in the
+benchmark come only from the tiering/promotion policy:
+
+  rocksdb_fd       — everything on FD (upper bound)
+  rocksdb_tiered   — plain tiered LSM, FD levels sized to the FD budget
+  mutant           — SSTable-granularity temperatures, periodic placement
+                     migration (Mutant, SoCC'18) — paper limitation 2
+  sas_cache        — FD secondary *block* cache over the tiered LSM
+                     (RocksDB SecondaryCache / SAS-Cache) — limitation 2
+  prismdb          — clock-bit popularity; retention/promotion happen
+                     only during compactions (PrismDB, ASPLOS'23) —
+                     limitation 3
+  hotrap           — the paper's system
+  hotrap_noretain  — Table 3 ablation (promotion only)
+  hotrap_nohotcheck— Table 4 ablation (promote everything read from SD)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .lsm import LSMConfig, TieredLSM
+from .sstable import BLOCK_BYTES, KEY_BYTES, TOMBSTONE_VLEN, SSTable
+from .storage import BlockCache, StorageSim
+
+
+# ----------------------------------------------------------------------
+class RocksDBFD(TieredLSM):
+    """All levels on FD: the paper's upper bound."""
+
+    def __init__(self, cfg: LSMConfig, **kw):
+        cfg = dataclasses.replace(cfg, hotrap=False,
+                                  n_fd_levels=len(cfg.level_caps()) + 1)
+        super().__init__(cfg, **kw)
+
+
+class RocksDBTiered(TieredLSM):
+    def __init__(self, cfg: LSMConfig, **kw):
+        cfg = dataclasses.replace(cfg, hotrap=False)
+        super().__init__(cfg, **kw)
+
+
+# ----------------------------------------------------------------------
+class Mutant(TieredLSM):
+    """SSTable-level temperature tracking + periodic placement migration.
+
+    Temperature = exponentially-decayed access count / size.  Every
+    `migration_interval` accesses, SSTables are re-ranked and the hottest
+    ones are placed on FD up to the FD budget; moved SSTables charge a
+    sequential read+write.  Granularity is the whole SSTable — the cold
+    records it contains ride along (paper limitation 2).
+    """
+
+    def __init__(self, cfg: LSMConfig, migration_interval: int = 20_000,
+                 decay: float = 0.5, **kw):
+        cfg = dataclasses.replace(cfg, hotrap=False)
+        super().__init__(cfg, **kw)
+        self.migration_interval = migration_interval
+        self.decay = decay
+        self.temps: dict[int, float] = {}
+        self._accesses = 0
+
+    def _search_levels(self, key, level_range, fg, touched=None):
+        # wrap to count per-sstable accesses: piggyback on find path
+        res = super()._search_levels(key, level_range, fg, touched)
+        if res is not None:
+            sid = res[2]
+            self.temps[sid] = self.temps.get(sid, 0.0) + 1.0
+        return res
+
+    def get(self, key: int):
+        out = super().get(key)
+        self._accesses += 1
+        if self._accesses % self.migration_interval == 0:
+            self._migrate()
+        return out
+
+    def _migrate(self) -> None:
+        # decay temperatures, rank by heat density, fill the FD budget
+        all_ssts: list[SSTable] = [s for lvl in self.levels for s in lvl]
+        for sid in list(self.temps):
+            self.temps[sid] *= self.decay
+        ranked = sorted(
+            all_ssts,
+            key=lambda s: -(self.temps.get(s.sid, 0.0) / max(s.size_bytes, 1)))
+        budget = self.cfg.fd_size
+        want_fd: set[int] = set()
+        for s in ranked:
+            if budget - s.size_bytes < 0:
+                continue
+            budget -= s.size_bytes
+            want_fd.add(s.sid)
+        for s in all_ssts:
+            tgt = "FD" if s.sid in want_fd else "SD"
+            if s.tier != tgt:
+                # migration I/O: read from old tier, write to new
+                self.storage.seq_read(s.tier, s.size_bytes, fg=False,
+                                      component="migration")
+                self.storage.seq_write(tgt, s.size_bytes, fg=False,
+                                       component="migration")
+                s.tier = tgt
+
+    def _install(self, li, removed, added):
+        super()._install(li, removed, added)
+        for s in removed:
+            self.temps.pop(s.sid, None)
+
+
+# ----------------------------------------------------------------------
+class SASCache(TieredLSM):
+    """Tiered LSM + an FD secondary cache of SD data *blocks*.
+
+    On an SD block read that misses the in-memory block cache, the
+    secondary cache is consulted: hit => FD random read; miss => SD read
+    plus an FD write to admit the block.  Cold records inside hot blocks
+    ride along (paper limitation 2).
+    """
+
+    def __init__(self, cfg: LSMConfig, secondary_frac: float = 0.6, **kw):
+        cfg = dataclasses.replace(cfg, hotrap=False)
+        super().__init__(cfg, **kw)
+        # paper: 6 GB secondary cache for 10 GB FD => 0.6 * fd_size
+        self.secondary = BlockCache(int(secondary_frac * cfg.fd_size),
+                                    BLOCK_BYTES)
+
+    def _search_levels(self, key, level_range, fg, touched=None):
+        for li in level_range:
+            sstables = self.levels[li]
+            if not sstables:
+                continue
+            if li == 0:
+                cands = [s for s in sstables if s.min_key <= key <= s.max_key]
+            else:
+                idx = self._bisect_level(sstables, key)
+                cands = [sstables[idx]] if idx is not None else []
+            for s in cands:
+                if touched is not None:
+                    touched.append(s.sid)
+                if not s.bloom.may_contain(key):
+                    continue
+                found = s.find(key)
+                if found:
+                    blk = found[2]
+                elif s.n:
+                    i = min(int(np.searchsorted(s.keys, np.uint64(key))),
+                            s.n - 1)
+                    blk = int(s.block_of[i])
+                else:
+                    blk = 0
+                if not self.block_cache.access((s.sid, blk)):
+                    if s.tier == "SD":
+                        if self.secondary.access((s.sid, blk)):
+                            self.storage.rand_read("FD", BLOCK_BYTES, fg=fg,
+                                                   component="get")
+                        else:
+                            self.storage.rand_read("SD", BLOCK_BYTES, fg=fg,
+                                                   component="get")
+                            self.storage.seq_write("FD", BLOCK_BYTES,
+                                                   fg=False,
+                                                   component="secondary")
+                    else:
+                        self.storage.rand_read("FD", BLOCK_BYTES, fg=fg,
+                                               component="get")
+                if found:
+                    return found[0], found[1], s.sid
+        return None
+
+
+# ----------------------------------------------------------------------
+class PrismDB(TieredLSM):
+    """Clock-bit popularity; movement only piggybacks on compactions.
+
+    Reads set an in-memory clock bit per key (hash-table footprint the
+    paper criticises).  During cross-tier compactions, records whose
+    clock bit is set are written to FD (retention + promotion), all in
+    one pass; the clock hand clears bits periodically.  No promotion
+    cache and no flush pathway => promotion waits for compactions
+    (paper limitation 3).
+    """
+
+    def __init__(self, cfg: LSMConfig, clock_clear_interval: int = 50_000,
+                 **kw):
+        cfg = dataclasses.replace(cfg, hotrap=False)
+        super().__init__(cfg, **kw)
+        self.clock: dict[int, bool] = {}
+        self._reads = 0
+        self.clock_clear_interval = clock_clear_interval
+        self._clock_rng = np.random.default_rng(7)
+
+    def get(self, key: int):
+        out = super().get(key)
+        if out is not None:
+            self.clock[key] = True
+        self._reads += 1
+        if self._reads % self.clock_clear_interval == 0:
+            # clock hand sweep: clear ~half the bits
+            for k in list(self.clock):
+                if self._clock_rng.random() < 0.5:
+                    del self.clock[k]
+        return out
+
+    def _merge_into_next(self, li, inputs, lo, hi):
+        lj = li + 1
+        if lj != self.cfg.n_fd_levels:
+            return super()._merge_into_next(li, inputs, lo, hi)
+        # cross-tier: split merged output by clock bit
+        from .sstable import merge_runs, split_into_sstables
+        nexts = [t for t in self.levels[lj] if t.overlaps(lo, hi)]
+        all_inputs = inputs + nexts
+        for s in all_inputs:
+            self.storage.seq_read(s.tier, s.size_bytes, fg=False,
+                                  component="compaction")
+        self.stats.compaction_bytes += sum(s.size_bytes for s in all_inputs)
+        self.stats.compactions += 1
+        merged = merge_runs([(s.keys, s.seqs, s.vlens) for s in all_inputs],
+                            drop_tombstones=(lj == len(self.levels) - 1))
+        keys, seqs, vlens = merged
+        hot = np.array([self.clock.get(int(k), False) for k in keys],
+                       dtype=bool)
+        hot &= vlens != np.uint32(TOMBSTONE_VLEN)
+        new_fd = split_into_sstables(keys[hot], seqs[hot], vlens[hot],
+                                     "FD", li, self.now,
+                                     self.cfg.target_sstable_bytes)
+        new_sd = split_into_sstables(keys[~hot], seqs[~hot], vlens[~hot],
+                                     "SD", lj, self.now,
+                                     self.cfg.target_sstable_bytes)
+        fd_bytes = sum(s.size_bytes for s in new_fd)
+        sd_bytes = sum(s.size_bytes for s in new_sd)
+        if fd_bytes:
+            self.storage.seq_write("FD", fd_bytes, fg=False,
+                                   component="compaction")
+            self.stats.retained_bytes += fd_bytes
+        if sd_bytes:
+            self.storage.seq_write("SD", sd_bytes, fg=False,
+                                   component="compaction")
+        self.stats.compaction_bytes += fd_bytes + sd_bytes
+        self._install(li, inputs, new_fd)
+        self._install(lj, nexts, new_sd)
+        for s in all_inputs:
+            s.compacted = True
+            self._sid_compacted[s.sid] = True
+
+
+# ----------------------------------------------------------------------
+SYSTEMS = ["hotrap", "rocksdb_fd", "rocksdb_tiered", "mutant", "sas_cache",
+           "prismdb", "hotrap_noretain", "hotrap_nohotcheck"]
+
+
+def make_system(name: str, cfg: LSMConfig | None = None,
+                storage: StorageSim | None = None, seed: int = 0,
+                **overrides) -> TieredLSM:
+    cfg = cfg or LSMConfig()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    if name == "hotrap":
+        cfg = dataclasses.replace(cfg, hotrap=True)
+        return TieredLSM(cfg, storage=storage, seed=seed)
+    if name == "hotrap_noretain":
+        cfg = dataclasses.replace(cfg, hotrap=True, retention=False)
+        return TieredLSM(cfg, storage=storage, seed=seed)
+    if name == "hotrap_nohotcheck":
+        cfg = dataclasses.replace(cfg, hotrap=True, hotness_check=False)
+        return TieredLSM(cfg, storage=storage, seed=seed)
+    if name == "rocksdb_fd":
+        return RocksDBFD(cfg, storage=storage, seed=seed)
+    if name == "rocksdb_tiered":
+        return RocksDBTiered(cfg, storage=storage, seed=seed)
+    if name == "mutant":
+        return Mutant(cfg, storage=storage, seed=seed)
+    if name == "sas_cache":
+        return SASCache(cfg, storage=storage, seed=seed)
+    if name == "prismdb":
+        return PrismDB(cfg, storage=storage, seed=seed)
+    raise ValueError(f"unknown system {name!r} (choose from {SYSTEMS})")

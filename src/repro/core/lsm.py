@@ -1,0 +1,660 @@
+"""Tiered LSM-tree engine with HotRAP retention & promotion.
+
+One engine implements the paper's HotRAP plus every compared system via
+feature flags (see core/baselines.py):
+
+  * leveling + RocksDB-style partial compaction (one SSTable merged into
+    the overlapping SSTables of the next level), L0 by flush count;
+  * a tier boundary: levels [0, n_fd_levels) live on FD, the rest on SD;
+  * HotRAP pathways — retention (cross-tier compactions sort-merge
+    against a RALT hot-key iterator), promotion by compaction (mPC
+    records in the compaction range), promotion by flush (immPC checker
+    -> L0) with the paper's §3.3/§3.4 correctness checks;
+  * HotSize-adjusted cost-benefit SSTable picking (§3.5) with
+    fall-back-to-oldest;
+  * §3.6's shrunk-first-SD-level write-amplification option.
+
+Read semantics are faithful top-down-first-match (NOT max-seq), so the
+shielding hazards the paper's concurrency control addresses are real
+hazards here too — property tests verify the protocol keeps lookups
+correct under deferred checker execution and adversarial interleavings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .promotion import ImmutablePromotionCache, MutablePromotionCache
+from .ralt import RALT, RaltConfig
+from .sstable import (BLOCK_BYTES, KEY_BYTES, TOMBSTONE_VLEN, SSTable,
+                      merge_runs, split_into_sstables)
+from .storage import BlockCache, StorageSim
+
+MIB = 1024 * 1024
+
+
+@dataclasses.dataclass
+class LSMConfig:
+    fd_size: int = 64 * MIB
+    sd_size: int = 640 * MIB
+    size_ratio: int = 10
+    n_fd_levels: int = 3                 # L0..L2 on FD
+    target_sstable_bytes: int = 1 * MIB
+    memtable_bytes: int = 1 * MIB
+    l0_compaction_trigger: int = 4
+    block_cache_bytes: int = 1 * MIB     # scaled-down 128 MiB (paper §4.1)
+    bits_per_key: int = 10
+    # --- HotRAP features ---
+    hotrap: bool = False                 # enable RALT + promotion cache
+    retention: bool = True
+    promotion_by_compaction: bool = True
+    promotion_by_flush: bool = True
+    hotness_check: bool = True           # False => Table 4 ablation
+    checker_delay_ops: int = 64          # async Checker emulation
+    shrink_sd_first_level: bool = False  # §3.6 WA optimisation
+    sd_first_level_factor: float = 0.5   # the "p" used when shrinking
+    ralt_hot_limit_frac: float = 0.50    # initial: 50% of FD (paper §4.1)
+    ralt_phys_limit_frac: float = 0.15   # initial: 15% of FD
+    ralt_autotune: bool = True
+
+    def level_caps(self) -> list[float]:
+        """Byte capacity per level (L0 handled by count, entry is inf)."""
+        t = self.size_ratio
+        base = self.fd_size / (1 + t)    # L1 + L2 = fd_size for n_fd=3
+        caps = [float("inf"), base]
+        while True:
+            nxt = caps[-1] * t
+            lvl = len(caps)
+            if self.shrink_sd_first_level and lvl == self.n_fd_levels:
+                nxt *= self.sd_first_level_factor  # shrink first SD level
+            caps.append(nxt)
+            covered = sum(c for c in caps[self.n_fd_levels:])
+            if covered >= self.sd_size:
+                break
+            if len(caps) > 12:
+                break
+        caps[-1] = float("inf")          # last level unbounded
+        return caps
+
+
+@dataclasses.dataclass
+class Stats:
+    gets: int = 0
+    puts: int = 0
+    served_mem: int = 0
+    served_fd: int = 0
+    served_pc: int = 0
+    served_sd: int = 0
+    misses: int = 0
+    promoted_bytes: int = 0              # written to FD by promotion paths
+    retained_bytes: int = 0              # written back to FD by retention
+    compaction_bytes: int = 0            # read+write compaction traffic
+    flushes: int = 0
+    compactions: int = 0
+    pc_insert_aborts: int = 0
+    pc_inserts: int = 0
+    checker_runs: int = 0
+    checker_excluded_updated: int = 0
+    checker_excluded_newer: int = 0
+
+    @property
+    def fd_hit_rate(self) -> float:
+        num = self.served_mem + self.served_fd + self.served_pc
+        den = max(self.gets, 1)
+        return num / den
+
+
+class TieredLSM:
+    """The key-value store.  `put`/`get`/`delete` are the public API."""
+
+    def __init__(self, cfg: LSMConfig, storage: StorageSim | None = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.storage = storage or StorageSim()
+        self.caps = cfg.level_caps()
+        self.levels: list[list[SSTable]] = [[] for _ in self.caps]
+        self.memtable: dict[int, tuple[int, int]] = {}
+        self.memtable_bytes = 0
+        self.imm_memtables: list[dict[int, tuple[int, int]]] = []
+        self.seq = 0
+        self.now = 0                      # logical op counter
+        self.block_cache = BlockCache(cfg.block_cache_bytes, BLOCK_BYTES)
+        self.stats = Stats()
+        self.rng = np.random.default_rng(seed)
+        self._sid_compacted: dict[int, bool] = {}
+        # --- HotRAP state ---
+        self.ralt: RALT | None = None
+        self.mpc = MutablePromotionCache()
+        self.immpcs: list[ImmutablePromotionCache] = []
+        self._checker_queue: list[tuple[int, ImmutablePromotionCache]] = []
+        if cfg.hotrap:
+            rcfg = RaltConfig(
+                fd_size=cfg.fd_size,
+                hot_set_limit=int(cfg.ralt_hot_limit_frac * cfg.fd_size),
+                phys_limit=int(cfg.ralt_phys_limit_frac * cfg.fd_size),
+                autotune=cfg.ralt_autotune,
+                # scale the unsorted buffer with FD so small test configs
+                # still exercise flush/hotness paths
+                buffer_bytes=min(64 * 1024, max(4096, cfg.fd_size // 64)))
+            self.ralt = RALT(rcfg, self.storage)
+        # test hook: when set, PC insertions are deferred by this many ops
+        self.defer_pc_inserts: int = 0
+        self._deferred_pc: list[tuple[int, int, int, int, list[int]]] = []
+
+    # ------------------------------------------------------------------
+    # public API
+    # ------------------------------------------------------------------
+    def put(self, key: int, vlen: int) -> int:
+        self.seq += 1
+        seq = self.seq
+        prev = self.memtable.get(key)
+        if prev is not None:
+            self.memtable_bytes -= KEY_BYTES + self._vbytes(prev[1])
+        self.memtable[key] = (seq, vlen)
+        self.memtable_bytes += KEY_BYTES + self._vbytes(vlen)
+        self.stats.puts += 1
+        if self.memtable_bytes >= self.cfg.memtable_bytes:
+            self._rotate_memtable()
+            self._flush_imm_memtables()
+            self._maybe_compact()
+        self._tick()
+        return seq
+
+    def delete(self, key: int) -> int:
+        return self.put(key, TOMBSTONE_VLEN)
+
+    def get(self, key: int):
+        """Returns (seq, vlen) of the visible version, or None."""
+        self.stats.gets += 1
+        self._tick()
+        # 1. memtables
+        for table in [self.memtable, *self.imm_memtables]:
+            hit = table.get(key)
+            if hit is not None:
+                self.stats.served_mem += 1
+                return self._finish_get(key, hit, tier=None)
+        # 2. FD levels
+        hit = self._search_levels(key, range(0, self.cfg.n_fd_levels),
+                                  fg=True)
+        if hit is not None:
+            self.stats.served_fd += 1
+            return self._finish_get(key, hit[:2], tier="FD")
+        # 3. mutable promotion cache
+        pc_hit = self.mpc.get(key)
+        if pc_hit is not None:
+            self.stats.served_pc += 1
+            return self._finish_get(key, pc_hit, tier="PC")
+        # 4. SD levels (recording touched SSTables for the §3.3 check)
+        touched: list[int] = []
+        hit = self._search_levels(key, range(self.cfg.n_fd_levels,
+                                             len(self.levels)),
+                                  fg=True, touched=touched)
+        if hit is not None:
+            self.stats.served_sd += 1
+            seq, vlen, _ = hit
+            if self.cfg.hotrap and vlen != TOMBSTONE_VLEN:
+                self._insert_pc(key, seq, vlen, touched)
+            return self._finish_get(key, (seq, vlen), tier="SD")
+        self.stats.misses += 1
+        return None
+
+    # ------------------------------------------------------------------
+    # read path internals
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _vbytes(vlen: int) -> int:
+        return 0 if vlen == TOMBSTONE_VLEN else vlen
+
+    def _finish_get(self, key: int, hit: tuple[int, int], tier):
+        seq, vlen = hit
+        if vlen == TOMBSTONE_VLEN:
+            self.stats.misses += 1
+            return None
+        if self.ralt is not None:
+            self.ralt.record_access(key, vlen)
+        return seq, vlen
+
+    def _search_levels(self, key: int, level_range, fg: bool,
+                       touched: list[int] | None = None):
+        for li in level_range:
+            sstables = self.levels[li]
+            if not sstables:
+                continue
+            if li == 0:
+                cands = [s for s in sstables
+                         if s.min_key <= key <= s.max_key]
+            else:
+                idx = self._bisect_level(sstables, key)
+                cands = [sstables[idx]] if idx is not None else []
+            for s in cands:
+                if touched is not None:
+                    touched.append(s.sid)
+                if not s.bloom.may_contain(key):
+                    continue
+                found = s.find(key)
+                # bloom said maybe: charge the data-block read even on FP
+                if found:
+                    blk = found[2]
+                elif s.n:
+                    i = min(int(np.searchsorted(s.keys, np.uint64(key))),
+                            s.n - 1)
+                    blk = int(s.block_of[i])
+                else:
+                    blk = 0
+                if not self.block_cache.access((s.sid, blk)):
+                    self.storage.rand_read(s.tier, BLOCK_BYTES, fg=fg,
+                                           component="get" if fg else "checker")
+                if found:
+                    return found[0], found[1], s.sid
+        return None
+
+    @staticmethod
+    def _bisect_level(sstables: list[SSTable], key: int):
+        lo, hi = 0, len(sstables) - 1
+        while lo <= hi:
+            mid = (lo + hi) // 2
+            s = sstables[mid]
+            if key < s.min_key:
+                hi = mid - 1
+            elif key > s.max_key:
+                lo = mid + 1
+            else:
+                return mid
+        return None
+
+    # ------------------------------------------------------------------
+    # promotion cache (§3.3)
+    # ------------------------------------------------------------------
+    def _insert_pc(self, key: int, seq: int, vlen: int,
+                   touched: list[int]) -> None:
+        if self.defer_pc_inserts > 0:
+            self._deferred_pc.append(
+                (self.now + self.defer_pc_inserts, key, seq, vlen, touched))
+            return
+        self._do_insert_pc(key, seq, vlen, touched)
+
+    def _do_insert_pc(self, key: int, seq: int, vlen: int,
+                      touched: list[int]) -> None:
+        # §3.3: abort when any SD SSTable recorded during the access is
+        # being / has been compacted (a newer version may have sunk past us).
+        if any(self._sid_compacted.get(sid, False) for sid in touched):
+            self.stats.pc_insert_aborts += 1
+            return
+        self.stats.pc_inserts += 1
+        self.mpc.insert(key, seq, vlen, KEY_BYTES)
+        if self.mpc.bytes >= self.cfg.target_sstable_bytes:
+            self._freeze_mpc()
+
+    # ------------------------------------------------------------------
+    # promotion by flush (§3.4)
+    # ------------------------------------------------------------------
+    def _freeze_mpc(self) -> None:
+        if not self.cfg.promotion_by_flush:
+            # without the flush path the mPC just grows; cap it by dropping
+            # (records remain readable from SD) — keeps ablations runnable.
+            if self.mpc.bytes >= 4 * self.cfg.target_sstable_bytes:
+                self.mpc = MutablePromotionCache()
+            return
+        records = sorted((k, sv[0], sv[1]) for k, sv in self.mpc.data.items())
+        # snapshot = superversion reference (paper step 4, under DB mutex)
+        snap_levels = [list(self.levels[li])
+                       for li in range(self.cfg.n_fd_levels)]
+        snap_imms = [dict(m) for m in self.imm_memtables]
+        immpc = ImmutablePromotionCache(records, snap_levels, snap_imms)
+        self.immpcs.append(immpc)
+        self.mpc = MutablePromotionCache()
+        self._checker_queue.append((self.now + self.cfg.checker_delay_ops,
+                                    immpc))
+
+    def _run_checker(self, immpc: ImmutablePromotionCache) -> None:
+        """Background Checker (Fig. 5 steps 5-11)."""
+        self.stats.checker_runs += 1
+        if immpc not in self.immpcs:
+            return
+        hot: list[tuple[int, int, int]] = []
+        for key, seq, vlen in immpc.records:
+            if self.cfg.hotness_check and self.ralt is not None:
+                if not self.ralt.is_hot(key):
+                    continue
+            if key in immpc.updated:            # Fig. 5 (a)-(c) protocol
+                self.stats.checker_excluded_updated += 1
+                continue
+            if self._newer_in_snapshot(key, seq, immpc):
+                self.stats.checker_excluded_newer += 1
+                continue
+            hot.append((key, seq, vlen))
+        self.immpcs.remove(immpc)
+        if not hot:
+            return
+        hot_bytes = sum(KEY_BYTES + v for _, _, v in hot)
+        if hot_bytes < self.cfg.target_sstable_bytes // 2:
+            # too few: back into the mPC instead of polluting L0 (footnote 1)
+            for k, s, v in hot:
+                self.mpc.insert(k, s, v, KEY_BYTES)
+            return
+        keys = np.array([k for k, _, _ in hot], dtype=np.uint64)
+        seqs = np.array([s for _, s, _ in hot], dtype=np.int64)
+        vlens = np.array([v for _, _, v in hot], dtype=np.uint32)
+        sst = SSTable(keys, seqs, vlens, "FD", 0, self.now,
+                      self.cfg.bits_per_key)
+        self.storage.seq_write("FD", sst.size_bytes, fg=False,
+                               component="promotion")
+        self.stats.promoted_bytes += sst.size_bytes
+        self.levels[0].insert(0, sst)
+        self._maybe_compact()
+
+    def _newer_in_snapshot(self, key: int, seq: int,
+                           immpc: ImmutablePromotionCache) -> bool:
+        """Fig. 5 step 8: newer version in snapshot imm-memtables/FD levels."""
+        for m in immpc.snapshot_imm_memtables:
+            hit = m.get(key)
+            if hit is not None and hit[0] > seq:
+                return True
+        for sstables in immpc.snapshot:
+            for s in sstables:
+                if s.min_key <= key <= s.max_key and s.bloom.may_contain(key):
+                    found = s.find(key)
+                    if found:
+                        if not self.block_cache.access((s.sid, found[2])):
+                            self.storage.rand_read(s.tier, BLOCK_BYTES,
+                                                   fg=False,
+                                                   component="checker")
+                        if found[0] > seq:
+                            return True
+        return False
+
+    # ------------------------------------------------------------------
+    # flush & the updated-field protocol (Fig. 5 a-c)
+    # ------------------------------------------------------------------
+    def _rotate_memtable(self) -> None:
+        if not self.memtable:
+            return
+        # memtable becomes immutable: register its keys with every immPC
+        if self.immpcs:
+            for key in self.memtable:
+                for immpc in self.immpcs:
+                    if key in immpc.key_set:
+                        immpc.updated.add(key)
+        self.imm_memtables.insert(0, self.memtable)
+        self.memtable = {}
+        self.memtable_bytes = 0
+
+    def _flush_imm_memtables(self) -> None:
+        while self.imm_memtables:
+            table = self.imm_memtables.pop()
+            if not table:
+                continue
+            items = sorted(table.items())
+            keys = np.array([k for k, _ in items], dtype=np.uint64)
+            seqs = np.array([sv[0] for _, sv in items], dtype=np.int64)
+            vlens = np.array([sv[1] for _, sv in items], dtype=np.uint32)
+            sst = SSTable(keys, seqs, vlens, "FD", 0, self.now,
+                          self.cfg.bits_per_key)
+            self.storage.seq_write("FD", sst.size_bytes, fg=False,
+                                   component="flush")
+            self.levels[0].insert(0, sst)
+            self.stats.flushes += 1
+
+    # ------------------------------------------------------------------
+    # compaction
+    # ------------------------------------------------------------------
+    def level_bytes(self, li: int) -> int:
+        return sum(s.size_bytes for s in self.levels[li])
+
+    def _maybe_compact(self) -> None:
+        stuck: set[int] = set()
+        for _ in range(256):  # progress guard
+            work = False
+            if len(self.levels[0]) >= self.cfg.l0_compaction_trigger:
+                self._compact_l0()
+                work = True
+            for li in range(1, len(self.levels) - 1):
+                if li in stuck:
+                    continue
+                if self.level_bytes(li) > self.caps[li]:
+                    before = self.level_bytes(li)
+                    self._compact_one(li)
+                    if self.level_bytes(li) >= before:
+                        # retention wrote everything back — no progress is
+                        # possible right now (all-hot level); defer.
+                        stuck.add(li)
+                    else:
+                        work = True
+            if not work:
+                return
+
+    def _compact_l0(self) -> None:
+        inputs = list(self.levels[0])
+        if not inputs:
+            return
+        lo = min(s.min_key for s in inputs)
+        hi = max(s.max_key for s in inputs)
+        self._merge_into_next(0, inputs, lo, hi)
+
+    def _compact_one(self, li: int) -> bool:
+        sstables = self.levels[li]
+        if not sstables:
+            return False
+        cross_tier = (li == self.cfg.n_fd_levels - 1) and self.cfg.hotrap \
+            and self.cfg.retention
+        pick = self._pick_sstable(li, cross_tier)
+        if pick is None:
+            return False
+        self._merge_into_next(li, [pick], pick.min_key, pick.max_key)
+        return True
+
+    def _pick_sstable(self, li: int, cross_tier: bool) -> SSTable | None:
+        """§3.5: cost-benefit with HotSize-adjusted benefit at the tier
+        boundary; fall back to the oldest SSTable when all benefits <= 0."""
+        best, best_score = None, -1.0
+        for s in self.levels[li]:
+            overlap = sum(t.size_bytes for t in self.levels[li + 1]
+                          if t.overlaps(s.min_key, s.max_key))
+            benefit = float(s.size_bytes)
+            if cross_tier and self.ralt is not None:
+                benefit -= self.ralt.range_hot_bytes(s.min_key, s.max_key)
+            score = benefit / float(s.size_bytes + overlap)
+            if score > best_score:
+                best, best_score = s, score
+        if best_score <= 0.0:
+            best = min(self.levels[li], key=lambda s: s.created_at)
+        return best
+
+    def _merge_into_next(self, li: int, inputs: list[SSTable],
+                         lo: int, hi: int) -> None:
+        lj = li + 1
+        nexts = [t for t in self.levels[lj] if t.overlaps(lo, hi)]
+        all_inputs = inputs + nexts
+        for s in all_inputs:
+            s.being_compacted = True
+        in_bytes = sum(s.size_bytes for s in all_inputs)
+        for s in all_inputs:
+            self.storage.seq_read(s.tier, s.size_bytes, fg=False,
+                                  component="compaction")
+        self.stats.compaction_bytes += in_bytes
+        self.stats.compactions += 1
+
+        cross_tier = (lj == self.cfg.n_fd_levels) and self.cfg.hotrap
+        last_level = (lj == len(self.levels) - 1)
+        if cross_tier:
+            fd_out, sd_out = self._merge_cross_tier(inputs, nexts, lo, hi,
+                                                    last_level)
+            new_fd = split_into_sstables(*fd_out, "FD", li, self.now,
+                                         self.cfg.target_sstable_bytes)
+            new_sd = split_into_sstables(*sd_out, "SD", lj, self.now,
+                                         self.cfg.target_sstable_bytes)
+            fd_bytes = sum(s.size_bytes for s in new_fd)
+            sd_bytes = sum(s.size_bytes for s in new_sd)
+            if fd_bytes:
+                self.storage.seq_write("FD", fd_bytes, fg=False,
+                                       component="compaction")
+            if sd_bytes:
+                self.storage.seq_write("SD", sd_bytes, fg=False,
+                                       component="compaction")
+            self.stats.compaction_bytes += fd_bytes + sd_bytes
+            self._install(li, inputs, new_fd)
+            self._install(lj, nexts, new_sd)
+        else:
+            runs = [(s.keys, s.seqs, s.vlens) for s in all_inputs]
+            merged = merge_runs(runs, drop_tombstones=last_level)
+            tier = "FD" if lj < self.cfg.n_fd_levels else "SD"
+            new = split_into_sstables(*merged, tier, lj, self.now,
+                                      self.cfg.target_sstable_bytes)
+            out_bytes = sum(s.size_bytes for s in new)
+            if out_bytes:
+                self.storage.seq_write(tier, out_bytes, fg=False,
+                                       component="compaction")
+            self.stats.compaction_bytes += out_bytes
+            self._install(li, inputs, [])
+            self._install(lj, nexts, new)
+        for s in all_inputs:
+            s.being_compacted = False
+            s.compacted = True
+            self._sid_compacted[s.sid] = True
+            self.block_cache.invalidate_sstable(s.sid)
+
+    def _merge_cross_tier(self, fd_inputs: list[SSTable],
+                          sd_inputs: list[SSTable], lo: int, hi: int,
+                          last_level: bool):
+        """Retention (Fig. 2 steps 3-5) + promotion by compaction (6-9).
+
+        Returns ((keys,seqs,vlens) destined for FD, same for SD)."""
+        SRC_FD, SRC_PC, SRC_SD = 0, 1, 2
+        parts = []
+        for s in fd_inputs:
+            parts.append((s.keys, s.seqs, s.vlens,
+                          np.full(s.n, SRC_FD, dtype=np.int8)))
+        for s in sd_inputs:
+            parts.append((s.keys, s.seqs, s.vlens,
+                          np.full(s.n, SRC_SD, dtype=np.int8)))
+        pc_records = []
+        if self.cfg.promotion_by_compaction:
+            pc_records = self.mpc.extract_range(lo, hi, KEY_BYTES)
+        if pc_records:
+            parts.append((
+                np.array([k for k, _, _ in pc_records], dtype=np.uint64),
+                np.array([s for _, s, _ in pc_records], dtype=np.int64),
+                np.array([v for _, _, v in pc_records], dtype=np.uint32),
+                np.full(len(pc_records), SRC_PC, dtype=np.int8)))
+        keys = np.concatenate([p[0] for p in parts]).astype(np.uint64)
+        seqs = np.concatenate([p[1] for p in parts])
+        vlens = np.concatenate([p[2] for p in parts])
+        srcs = np.concatenate([p[3] for p in parts])
+        order = np.lexsort((srcs, -seqs, keys))
+        keys, seqs, vlens, srcs = (keys[order], seqs[order], vlens[order],
+                                   srcs[order])
+        first = np.ones(len(keys), dtype=bool)
+        first[1:] = keys[1:] != keys[:-1]
+
+        # hotness of each winning key via the RALT hot-key iterator
+        if self.ralt is not None:
+            hot_keys, _ = self.ralt.scan_hot(lo, hi)
+        else:
+            hot_keys = np.zeros(0, dtype=np.uint64)
+        wk = keys[first]
+        ws, wv, wsrc = seqs[first], vlens[first], srcs[first]
+        pos = np.searchsorted(hot_keys, wk)
+        is_hot = np.zeros(len(wk), dtype=bool)
+        in_rng = pos < len(hot_keys)
+        is_hot[in_rng] = hot_keys[pos[in_rng]] == wk[in_rng]
+        not_tomb = wv != np.uint32(TOMBSTONE_VLEN)
+        promote_all = not self.cfg.hotness_check
+
+        to_fd = not_tomb & (
+            ((wsrc == SRC_FD) & is_hot & self.cfg.retention)
+            | ((wsrc == SRC_PC) & (is_hot | promote_all)))
+        # PC-cold winners: drop the PC copy, but keep the best SD copy so
+        # the record is not lost from the rewritten SD run.
+        pc_cold = (wsrc == SRC_PC) & ~to_fd
+        if pc_cold.any():
+            # non-winner rows: find best SD row per pc_cold key
+            gid = np.cumsum(first) - 1
+            sd_rows = np.flatnonzero((srcs == SRC_SD) & ~first)
+            if len(sd_rows):
+                # first SD row per group (rows are seq-desc within key)
+                g = gid[sd_rows]
+                keep_sd = np.ones(len(sd_rows), dtype=bool)
+                keep_sd[1:] = g[1:] != g[:-1]
+                sd_rows = sd_rows[keep_sd]
+                need = pc_cold[gid[sd_rows]]
+                sd_rows = sd_rows[need]
+                if len(sd_rows):
+                    repl_g = gid[sd_rows]
+                    ws = ws.copy(); wv = wv.copy(); wsrc = wsrc.copy()
+                    ws[repl_g] = seqs[sd_rows]
+                    wv[repl_g] = vlens[sd_rows]
+                    wsrc[repl_g] = SRC_SD
+                    pc_cold[repl_g] = False
+        to_sd = ~to_fd & ~pc_cold
+        if last_level:
+            to_sd &= wv != np.uint32(TOMBSTONE_VLEN)
+        fd_sel = np.flatnonzero(to_fd)
+        sd_sel = np.flatnonzero(to_sd)
+        if self.cfg.hotrap and len(fd_sel):
+            pc_mask = wsrc[fd_sel] == SRC_PC
+            sizes = wv[fd_sel].astype(np.int64) + KEY_BYTES
+            self.stats.promoted_bytes += int(sizes[pc_mask].sum())
+            self.stats.retained_bytes += int(sizes[~pc_mask].sum())
+        return ((wk[fd_sel], ws[fd_sel], wv[fd_sel]),
+                (wk[sd_sel], ws[sd_sel], wv[sd_sel]))
+
+    def _install(self, li: int, removed: list[SSTable],
+                 added: list[SSTable]) -> None:
+        rm = set(s.sid for s in removed)
+        kept = [s for s in self.levels[li] if s.sid not in rm]
+        for s in added:
+            s.level = li
+            s.tier = "FD" if li < self.cfg.n_fd_levels else "SD"
+        kept.extend(added)
+        if li == 0:
+            kept.sort(key=lambda s: -s.created_at)
+        else:
+            kept.sort(key=lambda s: s.min_key)
+        self.levels[li] = kept
+
+    # ------------------------------------------------------------------
+    # clock: deferred checkers & deferred PC inserts (test hook)
+    # ------------------------------------------------------------------
+    def _tick(self) -> None:
+        self.now += 1
+        if self._checker_queue and self._checker_queue[0][0] <= self.now:
+            due = [c for c in self._checker_queue if c[0] <= self.now]
+            self._checker_queue = [c for c in self._checker_queue
+                                   if c[0] > self.now]
+            for _, immpc in due:
+                self._run_checker(immpc)
+        if self._deferred_pc:
+            due = [d for d in self._deferred_pc if d[0] <= self.now]
+            self._deferred_pc = [d for d in self._deferred_pc
+                                 if d[0] > self.now]
+            for _, key, seq, vlen, touched in due:
+                self._do_insert_pc(key, seq, vlen, touched)
+
+    def flush_all(self) -> None:
+        """Drain memtables + pending checkers (test/benchmark helper)."""
+        self._rotate_memtable()
+        self._flush_imm_memtables()
+        self._maybe_compact()
+        for _, immpc in self._checker_queue:
+            self._run_checker(immpc)
+        self._checker_queue = []
+
+    # ------------------------------------------------------------------
+    def reset_storage(self) -> None:
+        """Fresh I/O + op accounting (run-phase-only measurements)."""
+        self.storage = StorageSim(self.storage.spec["FD"],
+                                  self.storage.spec["SD"])
+        if self.ralt is not None:
+            self.ralt.storage = self.storage
+        self.stats = Stats()
+
+    def fd_used_bytes(self) -> int:
+        used = sum(self.level_bytes(li)
+                   for li in range(self.cfg.n_fd_levels))
+        if self.ralt is not None:
+            used += self.ralt.phys_bytes
+        return used
+
+    def total_records(self) -> int:
+        return sum(s.n for level in self.levels for s in level)

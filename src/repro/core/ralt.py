@@ -1,0 +1,414 @@
+"""RALT — Recent Access Lookup Table (paper §3.2, §3.7).
+
+A small, specially-made LSM-tree on FD that logs record accesses:
+
+  access record = (key, value_len, tick, score [, c, tag, epoch])
+
+* scores use exponential smoothing with the lazy (tick, score)
+  representation and the paper's merge rule (core/scoring.py);
+* an in-memory *unsorted* buffer absorbs inserts (critical path of
+  lookups) and is sorted+flushed to FD when full;
+* sorted runs carry (a) an in-memory bloom filter over their *hot* keys
+  (14 bits/key => FPR << 1%, no second verification), and (b) index
+  blocks storing, per 16 KiB data block, the first key and the prefix
+  sum of the HotRAP size of hot keys — giving O(1) range hot-set-size
+  queries with the paper's tolerated edge-block/duplicate overestimate;
+* eviction (when hot-set size or physical size exceeds its limit) drops
+  ~beta of the records using the paper's *sampling* threshold: sample N
+  positions uniformly in cumulative-size space, pick the k-th largest
+  sampled score, k = N * (1 - beta); all surviving records are merged
+  into a single sorted run (charged as 2 full scans + rewrite, matching
+  the paper's read/write-amplification accounting);
+* the auto-tuner (paper Alg. 1) runs at eviction time: per-record
+  counters c (+Delta_c per hit, capped, -1 per R bytes accessed —
+  implemented lazily via an epoch stamp) and stability tags t drive the
+  hot-set-size limit toward |stable set| + D_hs within [L_hs, R_hs].
+
+Physical record size: (key + 4) + 4*3 bytes, + 2 autotune bytes
+(paper Fig. 3, adapted to our 24-byte keys).
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from . import scoring
+from .sstable import KEY_BYTES, BLOCK_BYTES, BloomFilter
+from .storage import StorageSim
+
+PHYS_RECORD_BYTES = (KEY_BYTES + 4) + 4 * 3 + 2
+RALT_BITS_PER_KEY = 14   # paper: 14-bit blooms for hot keys
+
+
+@dataclasses.dataclass
+class RaltConfig:
+    fd_size: int                       # bytes of FD (drives tick + R)
+    hot_set_limit: int                 # initial: 0.5 * FD (paper §4.1)
+    phys_limit: int                    # initial: 0.15 * FD
+    beta: float = 0.10                 # eviction fraction
+    gamma: float = scoring.GAMMA       # tick every gamma * FD bytes accessed
+    alpha: float = scoring.ALPHA
+    buffer_bytes: int = 64 * 1024      # unsorted buffer flush threshold
+    n_samples: int = 256               # eviction threshold sampling
+    # --- auto-tuning (paper §3.7) ---
+    autotune: bool = True
+    delta_c: float = 2.6
+    c_max: float = 5.0
+    l_hs_frac: float = 0.05            # L_hs = 0.05 * FD
+    r_hs_frac: float = 0.70            # R_hs = 0.70 * FD
+    d_hs_frac: float = 0.10            # D_hs = 0.10 * R_hs
+
+    @property
+    def tick_bytes(self) -> int:
+        return max(1, int(self.gamma * self.fd_size))
+
+    @property
+    def r_bytes(self) -> int:          # R = R_hs (paper implementation detail)
+        return max(1, int(self.r_hs_frac * self.fd_size))
+
+    @property
+    def l_hs(self) -> int:
+        return int(self.l_hs_frac * self.fd_size)
+
+    @property
+    def r_hs(self) -> int:
+        return int(self.r_hs_frac * self.fd_size)
+
+    @property
+    def d_hs(self) -> int:
+        return int(self.d_hs_frac * self.r_hs)
+
+
+class RaltRun:
+    """One sorted run of access records, with hot-key bloom + index blocks."""
+
+    __slots__ = ("keys", "vlens", "ticks", "scores", "cnts", "tags", "epochs",
+                 "hot_mask", "bloom", "block_first_key", "block_cum_hot",
+                 "hot_bytes", "phys_bytes")
+
+    def __init__(self, keys, vlens, ticks, scores, cnts, tags, epochs,
+                 hot_threshold: float, now_tick: int, alpha: float):
+        self.keys = keys
+        self.vlens = vlens
+        self.ticks = ticks
+        self.scores = scores
+        self.cnts = cnts
+        self.tags = tags
+        self.epochs = epochs
+        cur = scores * np.power(alpha, now_tick - ticks)
+        self.hot_mask = cur >= hot_threshold
+        self.bloom = BloomFilter(keys[self.hot_mask], RALT_BITS_PER_KEY)
+        # HotRAP sizes of records; hot prefix sums at block granularity.
+        hot_sizes = np.where(self.hot_mask, vlens.astype(np.int64) + KEY_BYTES, 0)
+        cum = np.cumsum(hot_sizes)
+        self.hot_bytes = int(cum[-1]) if len(cum) else 0
+        self.phys_bytes = len(keys) * PHYS_RECORD_BYTES
+        # index blocks: one entry per data block of PHYS records
+        per_block = max(1, BLOCK_BYTES // PHYS_RECORD_BYTES)
+        starts = np.arange(0, len(keys), per_block)
+        self.block_first_key = keys[starts] if len(keys) else keys
+        # cumulative hot size *before* each block
+        self.block_cum_hot = np.concatenate(
+            [[0], cum[starts[1:] - 1]]) if len(starts) > 1 else np.zeros(
+                max(len(starts), 1), dtype=np.int64)
+
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+    def range_hot_bytes(self, lo: int, hi: int) -> int:
+        """Block-granular prefix-sum estimate of hot HotRAP bytes in [lo, hi]."""
+        if self.n == 0:
+            return 0
+        if lo > int(self.keys[-1]) or hi < int(self.keys[0]):
+            return 0
+        bi = int(np.searchsorted(self.block_first_key, np.uint64(lo), "right")) - 1
+        bj = int(np.searchsorted(self.block_first_key, np.uint64(hi), "right"))
+        bi, bj = max(bi, 0), min(bj, len(self.block_cum_hot))
+        hi_cum = (self.hot_bytes if bj >= len(self.block_cum_hot)
+                  else int(self.block_cum_hot[bj]))
+        return max(0, hi_cum - int(self.block_cum_hot[bi]))
+
+    def slice_range(self, lo: int, hi: int):
+        a = int(np.searchsorted(self.keys, np.uint64(lo), "left"))
+        b = int(np.searchsorted(self.keys, np.uint64(hi), "right"))
+        return slice(a, b)
+
+
+def _merge_records(parts: list[tuple], alpha: float, now_epoch: int,
+                   c_max: float) -> tuple:
+    """k-way merge of RALT record arrays; same-key records fold via the
+    score merge rule; autotune counters add (lazily epoch-decremented),
+    tag activates on any repeat."""
+    keys = np.concatenate([p[0] for p in parts])
+    vlens = np.concatenate([p[1] for p in parts])
+    ticks = np.concatenate([p[2] for p in parts])
+    scores = np.concatenate([p[3] for p in parts])
+    cnts = np.concatenate([p[4] for p in parts])
+    tags = np.concatenate([p[5] for p in parts])
+    epochs = np.concatenate([p[6] for p in parts])
+    if len(keys) == 0:
+        return keys, vlens, ticks, scores, cnts, tags, epochs
+    order = np.lexsort((ticks, keys))
+    keys, vlens, ticks, scores = keys[order], vlens[order], ticks[order], scores[order]
+    cnts, tags, epochs = cnts[order], tags[order], epochs[order]
+    # group boundaries
+    new_grp = np.ones(len(keys), dtype=bool)
+    new_grp[1:] = keys[1:] != keys[:-1]
+    gid = np.cumsum(new_grp) - 1
+    n_g = int(gid[-1]) + 1
+    # score merge: rescale every record to the group's max tick, then sum.
+    gmax_tick = np.zeros(n_g, dtype=ticks.dtype)
+    np.maximum.at(gmax_tick, gid, ticks)
+    scaled = scores * np.power(alpha, gmax_tick[gid] - ticks)
+    gscore = np.zeros(n_g)
+    np.add.at(gscore, gid, scaled)
+    # lazy epoch decrement, then add counters within group (capped)
+    eff_c = np.maximum(cnts - (now_epoch - epochs), 0.0)
+    gc = np.zeros(n_g)
+    np.add.at(gc, gid, eff_c)
+    gc = np.minimum(gc, c_max)
+    # tag: 1 if any member tagged, or if group has >= 2 members (repeat hit)
+    gtag = np.zeros(n_g, dtype=np.int8)
+    np.maximum.at(gtag, gid, tags)
+    gcount = np.zeros(n_g, dtype=np.int64)
+    np.add.at(gcount, gid, 1)
+    gtag = np.where(gcount >= 2, 1, gtag).astype(np.int8)
+    first = np.flatnonzero(new_grp)
+    return (keys[first], vlens[first], gmax_tick, gscore, gc, gtag,
+            np.full(n_g, now_epoch, dtype=np.int64))
+
+
+class RALT:
+    """The Recent Access Lookup Table."""
+
+    def __init__(self, cfg: RaltConfig, storage: StorageSim):
+        self.cfg = cfg
+        self.storage = storage
+        self.buf_keys: list[int] = []
+        self.buf_vlens: list[int] = []
+        self.buf_ticks: list[int] = []
+        self.runs: list[RaltRun] = []     # newest first
+        self.tick = 0
+        self.epoch = 0
+        self._accessed_since_tick = 0
+        self._accessed_since_epoch = 0
+        self.hot_threshold = 0.0
+        self.hot_set_limit = cfg.hot_set_limit
+        self.phys_limit = cfg.phys_limit
+        self.n_evictions = 0
+
+    # ------------------------------------------------------------------
+    def record_access(self, key: int, vlen: int) -> None:
+        """Log one access; advances tick/epoch clocks by accessed bytes."""
+        self.buf_keys.append(key)
+        self.buf_vlens.append(vlen)
+        self.buf_ticks.append(self.tick)
+        nbytes = KEY_BYTES + vlen
+        self._accessed_since_tick += nbytes
+        if self._accessed_since_tick >= self.cfg.tick_bytes:
+            self.tick += self._accessed_since_tick // self.cfg.tick_bytes
+            self._accessed_since_tick %= self.cfg.tick_bytes
+        self._accessed_since_epoch += nbytes
+        if self._accessed_since_epoch >= self.cfg.r_bytes:
+            self.epoch += 1
+            self._accessed_since_epoch -= self.cfg.r_bytes
+        if len(self.buf_keys) * PHYS_RECORD_BYTES >= self.cfg.buffer_bytes:
+            self._flush_buffer()
+        if (self.hot_set_bytes > self.hot_set_limit
+                or self.phys_bytes > self.phys_limit):
+            self._evict()
+
+    # ------------------------------------------------------------------
+    @property
+    def hot_set_bytes(self) -> int:
+        return sum(r.hot_bytes for r in self.runs)
+
+    @property
+    def phys_bytes(self) -> int:
+        return (sum(r.phys_bytes for r in self.runs)
+                + len(self.buf_keys) * PHYS_RECORD_BYTES)
+
+    def is_hot(self, key: int) -> bool:
+        """Bloom-filter check across runs (in memory — no I/O, paper §3.2)."""
+        return any(r.bloom.may_contain(key) for r in self.runs)
+
+    def range_hot_bytes(self, lo: int, hi: int) -> int:
+        """Estimated hot-set HotRAP size in [lo, hi] (overestimates dups)."""
+        return sum(r.range_hot_bytes(lo, hi) for r in self.runs)
+
+    def scan_hot(self, lo: int, hi: int) -> tuple[np.ndarray, np.ndarray]:
+        """Hot keys (sorted, deduped) and their vlens within [lo, hi].
+
+        Charges the sequential RALT read I/O of the touched ranges; used
+        by retention's sort-merge iterator (paper Fig. 2 step 4)."""
+        parts, nbytes = [], 0
+        for r in self.runs:
+            sl = r.slice_range(lo, hi)
+            if sl.stop <= sl.start:
+                continue
+            nbytes += (sl.stop - sl.start) * PHYS_RECORD_BYTES
+            parts.append((r.keys[sl], r.vlens[sl], r.ticks[sl], r.scores[sl],
+                          r.cnts[sl], r.tags[sl], r.epochs[sl]))
+        if nbytes:
+            self.storage.seq_read("FD", nbytes, fg=False, component="ralt")
+        if not parts:
+            e = np.zeros(0, dtype=np.uint64)
+            return e, np.zeros(0, dtype=np.uint32)
+        m = _merge_records(parts, self.cfg.alpha, self.epoch, self.cfg.c_max)
+        keys, vlens, ticks, scores = m[0], m[1], m[2], m[3]
+        cur = scores * np.power(self.cfg.alpha, self.tick - ticks)
+        hot = cur >= self.hot_threshold
+        return keys[hot], vlens[hot]
+
+    # ------------------------------------------------------------------
+    def _flush_buffer(self) -> None:
+        if not self.buf_keys:
+            return
+        keys = np.array(self.buf_keys, dtype=np.uint64)
+        vlens = np.array(self.buf_vlens, dtype=np.uint32)
+        ticks = np.array(self.buf_ticks, dtype=np.int64)
+        scores = np.ones(len(keys))
+        cnts = np.full(len(keys), self.cfg.delta_c)
+        tags = np.zeros(len(keys), dtype=np.int8)
+        epochs = np.full(len(keys), self.epoch, dtype=np.int64)
+        merged = _merge_records(
+            [(keys, vlens, ticks, scores, cnts, tags, epochs)],
+            self.cfg.alpha, self.epoch, self.cfg.c_max)
+        run = RaltRun(*merged, hot_threshold=self.hot_threshold,
+                      now_tick=self.tick, alpha=self.cfg.alpha)
+        self.storage.seq_write("FD", run.phys_bytes, fg=False, component="ralt")
+        self.runs.insert(0, run)
+        self.buf_keys, self.buf_vlens, self.buf_ticks = [], [], []
+        # Leveling-ish maintenance: bound the run count by merging all
+        # runs once too many accumulate (RALT is small; the paper merges
+        # step-by-step to bound temp space — same I/O, simpler shape).
+        if len(self.runs) > 8:
+            self._merge_all_runs()
+
+    def _gather_all(self) -> tuple:
+        self._flush_pending_buffer_arrays()
+        parts = [(r.keys, r.vlens, r.ticks, r.scores, r.cnts, r.tags, r.epochs)
+                 for r in self.runs]
+        if not parts:
+            e = np.zeros(0, dtype=np.uint64)
+            z = np.zeros(0)
+            return (e, np.zeros(0, dtype=np.uint32), np.zeros(0, dtype=np.int64),
+                    z, z, np.zeros(0, dtype=np.int8), np.zeros(0, dtype=np.int64))
+        return _merge_records(parts, self.cfg.alpha, self.epoch, self.cfg.c_max)
+
+    def _flush_pending_buffer_arrays(self) -> None:
+        if self.buf_keys:
+            self._flush_buffer_noio()
+
+    def _flush_buffer_noio(self) -> None:
+        keys = np.array(self.buf_keys, dtype=np.uint64)
+        vlens = np.array(self.buf_vlens, dtype=np.uint32)
+        ticks = np.array(self.buf_ticks, dtype=np.int64)
+        merged = _merge_records(
+            [(keys, vlens, ticks, np.ones(len(keys)),
+              np.full(len(keys), self.cfg.delta_c),
+              np.zeros(len(keys), dtype=np.int8),
+              np.full(len(keys), self.epoch, dtype=np.int64))],
+            self.cfg.alpha, self.epoch, self.cfg.c_max)
+        self.runs.insert(0, RaltRun(*merged, hot_threshold=self.hot_threshold,
+                                    now_tick=self.tick, alpha=self.cfg.alpha))
+        self.buf_keys, self.buf_vlens, self.buf_ticks = [], [], []
+
+    def _merge_all_runs(self) -> None:
+        total_phys = sum(r.phys_bytes for r in self.runs)
+        self.storage.seq_read("FD", total_phys, fg=False, component="ralt")
+        merged = self._gather_all()
+        run = RaltRun(*merged, hot_threshold=self.hot_threshold,
+                      now_tick=self.tick, alpha=self.cfg.alpha)
+        self.storage.seq_write("FD", run.phys_bytes, fg=False, component="ralt")
+        self.runs = [run]
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def sample_threshold(sizes: np.ndarray, scores: np.ndarray,
+                         keep_frac: float, n_samples: int,
+                         rng: np.random.Generator) -> float:
+        """Paper §3.2 eviction: sample positions uniformly in cumulative
+        size space; the k-th largest sampled score (k = N * keep_frac)
+        approximates the threshold S' with sum_{S_i >= S'} A_i ~= keep * A."""
+        if len(sizes) == 0:
+            return 0.0
+        cum = np.cumsum(sizes.astype(np.float64))
+        total = cum[-1]
+        pos = rng.uniform(0.0, total, size=n_samples)
+        idx = np.searchsorted(cum, pos, side="right")
+        idx = np.clip(idx, 0, len(scores) - 1)
+        sampled = np.sort(scores[idx])[::-1]
+        k = int(round(n_samples * keep_frac))
+        k = min(max(k, 1), n_samples)
+        return float(sampled[k - 1])
+
+    def _evict(self) -> None:
+        """Eviction + merge-all + (optionally) auto-tune (paper Alg. 1)."""
+        self.n_evictions += 1
+        cfg = self.cfg
+        rng = np.random.default_rng(self.n_evictions)
+        total_phys_before = self.phys_bytes
+        # two full scans: one to sample thresholds, one to merge (paper RA)
+        self.storage.seq_read("FD", 2 * total_phys_before, fg=False,
+                              component="ralt")
+        keys, vlens, ticks, scores, cnts, tags, epochs = self._gather_all()
+        self.runs = []
+        if len(keys) == 0:
+            return
+        cur = scores * np.power(cfg.alpha, self.tick - ticks)
+        hsizes = vlens.astype(np.int64) + KEY_BYTES
+        psizes = np.full(len(keys), PHYS_RECORD_BYTES, dtype=np.int64)
+        eff_c = np.maximum(cnts - (self.epoch - epochs), 0.0)
+        stable = (eff_c > 0) & (tags == 1)
+
+        keep = np.ones(len(keys), dtype=bool)
+        if cfg.autotune:
+            # Alg.1 line 15: first drop old *unstable* records.
+            hot_now = cur >= self.hot_threshold
+            over_hot = int((hsizes * hot_now).sum()) > self.hot_set_limit
+            over_phys = int(psizes.sum()) > self.phys_limit
+            if over_hot or over_phys:
+                keep &= stable
+        kept_frac = 1.0 - cfg.beta
+        # Alg.1 line 16 / §3.2: continue evicting by low score if needed.
+        def overshoot(mask):
+            return (int((hsizes * mask).sum()) > self.hot_set_limit
+                    or int((psizes * mask).sum()) > self.phys_limit)
+        if overshoot(keep):
+            phys_thr = self.sample_threshold(psizes[keep], cur[keep],
+                                             kept_frac, cfg.n_samples, rng)
+            hot_thr = self.sample_threshold(hsizes[keep], cur[keep],
+                                            kept_frac, cfg.n_samples, rng)
+            # records below the *physical* threshold leave RALT entirely;
+            # those between stay but are no longer hot (paper §3.2).
+            keep &= cur >= phys_thr
+            self.hot_threshold = max(hot_thr, phys_thr)
+        else:
+            # unstable purge sufficed; hot threshold keeps prior value
+            pass
+
+        sel = np.flatnonzero(keep)
+        merged = (keys[sel], vlens[sel], ticks[sel], scores[sel], cnts[sel],
+                  tags[sel], np.full(len(sel), self.epoch, dtype=np.int64))
+        run = RaltRun(*merged, hot_threshold=self.hot_threshold,
+                      now_tick=self.tick, alpha=cfg.alpha)
+        self.storage.seq_write("FD", run.phys_bytes, fg=False, component="ralt")
+        self.runs = [run]
+
+        if cfg.autotune:
+            # Alg.1 lines 18-21.
+            t_sz = int((hsizes * (keep & stable)).sum())
+            p_sz = int((psizes * (keep & stable)).sum())
+            self.hot_set_limit = max(cfg.l_hs, min(t_sz + cfg.d_hs, cfg.r_hs))
+            r = PHYS_RECORD_BYTES / max(float(hsizes.mean()), 1.0)
+            self.phys_limit = int(p_sz + r * cfg.d_hs)
+
+    # ------------------------------------------------------------------
+    def memory_usage_bytes(self) -> int:
+        """In-memory footprint: blooms + index blocks (paper §3.2)."""
+        bloom = sum(r.bloom.nbytes for r in self.runs)
+        index = sum(r.block_first_key.nbytes + r.block_cum_hot.nbytes
+                    for r in self.runs)
+        return bloom + index

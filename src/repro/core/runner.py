@@ -1,0 +1,149 @@
+"""Load/run-phase driver shared by tests and benchmarks.
+
+Mirrors the paper's methodology (§4.2): a load phase inserts the whole
+key space (shuffled), then the run phase executes the workload; reported
+throughput is ops / simulated-I/O-bound time over the final 10% of the
+run phase (the paper averages the final 10% too).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..data.workloads import OP_INSERT, OP_READ, OP_UPDATE, Workload, load_keys
+from .baselines import make_system
+from .lsm import LSMConfig, TieredLSM
+from .storage import MIB
+
+
+@dataclasses.dataclass
+class RunResult:
+    system: str
+    n_ops: int
+    sim_seconds: float          # whole run phase
+    tail_window_seconds: float  # final 10% of ops
+    throughput: float           # ops/s over final 10% (paper metric)
+    fd_hit_rate: float
+    get_latencies: np.ndarray   # per-get simulated seconds
+    stats: dict
+    storage: dict
+
+    @property
+    def p99(self) -> float:
+        return float(np.percentile(self.get_latencies, 99)) \
+            if len(self.get_latencies) else 0.0
+
+    @property
+    def p999(self) -> float:
+        return float(np.percentile(self.get_latencies, 99.9)) \
+            if len(self.get_latencies) else 0.0
+
+
+def default_config(scale: str = "small") -> LSMConfig:
+    """Laptop-scaled versions of the paper's 10 GB FD : 100 GB SD setup."""
+    if scale == "tiny":        # tests
+        return LSMConfig(fd_size=2 * MIB, sd_size=20 * MIB,
+                         target_sstable_bytes=128 * 1024,
+                         memtable_bytes=128 * 1024,
+                         block_cache_bytes=64 * 1024)
+    if scale == "small":       # default benchmarks
+        return LSMConfig(fd_size=16 * MIB, sd_size=160 * MIB,
+                         target_sstable_bytes=512 * 1024,
+                         memtable_bytes=512 * 1024,
+                         block_cache_bytes=256 * 1024)
+    if scale == "medium":      # --full benchmarks
+        return LSMConfig(fd_size=64 * MIB, sd_size=640 * MIB,
+                         target_sstable_bytes=1 * MIB,
+                         memtable_bytes=1 * MIB,
+                         block_cache_bytes=1 * MIB)
+    raise ValueError(scale)
+
+
+def db_key_count(cfg: LSMConfig, value_len: int) -> int:
+    """#records so the loaded DB is ~ (fd+sd) * 10/11 full (paper: 110 GB
+    into a 10+100 GB hierarchy ≈ fully tiered)."""
+    from .sstable import KEY_BYTES
+    total = cfg.fd_size + cfg.sd_size
+    return int(total / (KEY_BYTES + value_len))
+
+
+def load_db(db: TieredLSM, n_keys: int, value_len: int, seed: int = 0
+            ) -> None:
+    for k in load_keys(n_keys, seed):
+        db.put(int(k), value_len)
+    db.flush_all()
+
+
+def run_workload(db: TieredLSM, wl: Workload, name: str = "?",
+                 collect_latency: bool = True) -> RunResult:
+    fresh_value = wl.value_len
+    n = len(wl.ops)
+    fd_lat = np.zeros(n if collect_latency else 0)
+    sd_lat = np.zeros(n if collect_latency else 0)
+    t10_start_ops = int(n * 0.9)
+    busy90 = {t: 0.0 for t in ("FD", "SD")}
+    gets90 = hits90 = 0
+    for j in range(n):
+        if j == t10_start_ops:
+            busy90 = {t: db.storage.dev[t].busy for t in ("FD", "SD")}
+            gets90 = db.stats.gets
+            hits90 = (db.stats.served_mem + db.stats.served_fd
+                      + db.stats.served_pc)
+        op, key = int(wl.ops[j]), int(wl.keys[j])
+        if op == OP_READ:
+            if collect_latency:
+                f0 = db.storage.dev["FD"].fg_time
+                s0 = db.storage.dev["SD"].fg_time
+                db.get(key)
+                fd_lat[j] = db.storage.dev["FD"].fg_time - f0
+                sd_lat[j] = db.storage.dev["SD"].fg_time - s0
+            else:
+                db.get(key)
+        elif op == OP_INSERT:
+            db.put(key, fresh_value)
+        else:
+            db.put(key, fresh_value)
+    total = db.storage.sim_time
+    # Throughput = ops in window / bottleneck-device work in the window
+    # (devices serve concurrently; the busiest one gates completion).
+    window = max(max(db.storage.dev[t].busy - busy90[t]
+                     for t in ("FD", "SD")), 1e-12)
+    thr = (n - t10_start_ops) / window
+    # Tail latency (paper Fig. 8 metric: final 10% of the run): service
+    # time inflated by steady-state device utilisation (M/M/1-style
+    # 1/(1-rho)) — a saturated device queues, an idle one does not.
+    if collect_latency:
+        lat = np.zeros(n - t10_start_ops)
+        for t, arr in (("FD", fd_lat), ("SD", sd_lat)):
+            rho = min((db.storage.dev[t].busy - busy90[t]) / window, 0.95)
+            lat += arr[t10_start_ops:] / (1.0 - rho)
+        window_reads = wl.ops[t10_start_ops:] == OP_READ
+    else:
+        lat = fd_lat
+        window_reads = np.zeros(0, dtype=bool)
+    reads = wl.ops == OP_READ
+    # paper metric: FD hit rate over the *final 10%* of the run phase
+    gets_w = db.stats.gets - gets90
+    hits_w = (db.stats.served_mem + db.stats.served_fd
+              + db.stats.served_pc) - hits90
+    hit_final = hits_w / gets_w if gets_w else db.stats.fd_hit_rate
+    return RunResult(
+        system=name, n_ops=n, sim_seconds=total,
+        tail_window_seconds=window, throughput=thr,
+        fd_hit_rate=hit_final,
+        get_latencies=lat[window_reads] if collect_latency else lat,
+        stats=dataclasses.asdict(db.stats),
+        storage=db.storage.snapshot())
+
+
+def bench_system(system: str, mix: str, dist, n_ops: int, value_len: int,
+                 scale: str = "small", seed: int = 0,
+                 cfg: LSMConfig | None = None) -> RunResult:
+    from ..data.workloads import ycsb
+    cfg = cfg or default_config(scale)
+    db = make_system(system, cfg, seed=seed)
+    n_keys = dist.n_keys
+    load_db(db, n_keys, value_len, seed)
+    wl = ycsb(mix, dist, n_ops, value_len, seed)
+    return run_workload(db, wl, name=system)

@@ -1,0 +1,184 @@
+"""SSTable: an immutable sorted run backed by numpy arrays.
+
+Keys are uint64 (the YCSB key space maps onto dense ints); a record's
+logical ("HotRAP") size is key_size + value_len, matching the paper's
+accounting.  Values themselves are simulated: each record carries its
+`seq` (global sequence number) which doubles as the version payload so
+correctness tests can verify that lookups return the *latest* version.
+
+Data is organised into simulated 16 KiB blocks; reading a record charges
+one random block read on the SSTable's tier (unless the block cache
+hits).  A per-SSTable bloom filter (10 bits/key, k=7 — the paper's
+baseline config) avoids touching SSTables that cannot contain the key.
+"""
+from __future__ import annotations
+
+import itertools
+import numpy as np
+
+KEY_BYTES = 24          # paper: ~24 B keys
+BLOCK_BYTES = 16 * 1024  # paper: 16 KiB blocks (Meta practice)
+
+_sstable_ids = itertools.count()
+
+_TOMBSTONE = np.uint32(0xFFFFFFFF)
+
+
+class BloomFilter:
+    """Vectorised multiply-shift bloom filter over uint64 keys."""
+
+    # 64-bit odd multipliers (splitmix-style) for k independent hashes.
+    _MULTS = np.array(
+        [0x9E3779B97F4A7C15, 0xBF58476D1CE4E5B9, 0x94D049BB133111EB,
+         0xD6E8FEB86659FD93, 0xA5A5A5A5A5A5A5A5 | 1, 0xC2B2AE3D27D4EB4F,
+         0x165667B19E3779F9, 0x27D4EB2F165667C5], dtype=np.uint64)
+
+    def __init__(self, keys: np.ndarray, bits_per_key: int = 10):
+        n = max(len(keys), 1)
+        self.k = max(1, min(8, int(round(bits_per_key * 0.69))))
+        self.nbits = np.uint64(max(64, n * bits_per_key))
+        self.bits = np.zeros((int(self.nbits) + 63) // 64, dtype=np.uint64)
+        if len(keys):
+            for m in self._MULTS[: self.k]:
+                h = (keys.astype(np.uint64) * m) >> np.uint64(33)
+                idx = h % self.nbits
+                np.bitwise_or.at(self.bits, (idx >> np.uint64(6)).astype(np.int64),
+                                 np.uint64(1) << (idx & np.uint64(63)))
+
+    def may_contain(self, key: int) -> bool:
+        k = int(key)
+        nbits = int(self.nbits)
+        for m in self._MULTS[: self.k]:
+            h = ((k * int(m)) & 0xFFFFFFFFFFFFFFFF) >> 33
+            idx = h % nbits
+            if not (int(self.bits[idx >> 6]) >> (idx & 63)) & 1:
+                return False
+        return True
+
+    def may_contain_many(self, keys: np.ndarray) -> np.ndarray:
+        out = np.ones(len(keys), dtype=bool)
+        ks = keys.astype(np.uint64)
+        for m in self._MULTS[: self.k]:
+            h = (ks * m) >> np.uint64(33)
+            idx = h % self.nbits
+            bit = (self.bits[(idx >> np.uint64(6)).astype(np.int64)]
+                   >> (idx & np.uint64(63))) & np.uint64(1)
+            out &= bit.astype(bool)
+        return out
+
+    @property
+    def nbytes(self) -> int:
+        return self.bits.nbytes
+
+
+class SSTable:
+    """Immutable sorted run.  `tier` is "FD" or "SD"."""
+
+    __slots__ = ("sid", "keys", "seqs", "vlens", "tier", "level",
+                 "bloom", "record_bytes", "block_of", "n_blocks",
+                 "created_at", "being_compacted", "compacted")
+
+    def __init__(self, keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
+                 tier: str, level: int, created_at: int,
+                 bits_per_key: int = 10):
+        assert len(keys) == len(seqs) == len(vlens)
+        self.sid = next(_sstable_ids)
+        self.keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        self.seqs = np.ascontiguousarray(seqs, dtype=np.int64)
+        self.vlens = np.ascontiguousarray(vlens, dtype=np.uint32)
+        self.tier = tier
+        self.level = level
+        self.created_at = created_at
+        # HotRAP size of each record (tombstones carry 0 value bytes).
+        sizes = np.where(self.vlens == _TOMBSTONE, 0,
+                         self.vlens).astype(np.int64) + KEY_BYTES
+        self.record_bytes = sizes
+        # Block assignment: records packed into 16 KiB blocks by byte offset.
+        offs = np.cumsum(sizes) - sizes
+        self.block_of = (offs // BLOCK_BYTES).astype(np.int32)
+        self.n_blocks = int(self.block_of[-1]) + 1 if len(keys) else 0
+        self.bloom = BloomFilter(self.keys, bits_per_key)
+        self.being_compacted = False
+        self.compacted = False
+
+    # ------------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+    @property
+    def size_bytes(self) -> int:
+        return int(self.record_bytes.sum())
+
+    @property
+    def min_key(self) -> int:
+        return int(self.keys[0])
+
+    @property
+    def max_key(self) -> int:
+        return int(self.keys[-1])
+
+    def overlaps(self, lo: int, hi: int) -> bool:
+        return not (self.max_key < lo or self.min_key > hi)
+
+    def find(self, key: int) -> tuple[int, int, int] | None:
+        """Returns (seq, vlen, block_idx) or None. No I/O charged here."""
+        i = int(np.searchsorted(self.keys, np.uint64(key)))
+        if i < self.n and int(self.keys[i]) == key:
+            return int(self.seqs[i]), int(self.vlens[i]), int(self.block_of[i])
+        return None
+
+    @staticmethod
+    def is_tombstone(vlen: int) -> bool:
+        return vlen == int(_TOMBSTONE)
+
+
+TOMBSTONE_VLEN = int(_TOMBSTONE)
+
+
+def merge_runs(runs: list[tuple[np.ndarray, np.ndarray, np.ndarray]],
+               drop_tombstones: bool = False
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """k-way merge of (keys, seqs, vlens) runs, newest-seq wins per key.
+
+    Vectorised: concatenate + stable argsort by (key, -seq), keep first
+    occurrence of each key.
+    """
+    if not runs:
+        e = np.zeros(0, dtype=np.uint64)
+        return e, np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.uint32)
+    keys = np.concatenate([r[0] for r in runs]).astype(np.uint64)
+    seqs = np.concatenate([r[1] for r in runs]).astype(np.int64)
+    vlens = np.concatenate([r[2] for r in runs]).astype(np.uint32)
+    # sort by key asc, then seq desc
+    order = np.lexsort((-seqs, keys))
+    keys, seqs, vlens = keys[order], seqs[order], vlens[order]
+    keep = np.ones(len(keys), dtype=bool)
+    keep[1:] = keys[1:] != keys[:-1]
+    keys, seqs, vlens = keys[keep], seqs[keep], vlens[keep]
+    if drop_tombstones:
+        live = vlens != _TOMBSTONE
+        keys, seqs, vlens = keys[live], seqs[live], vlens[live]
+    return keys, seqs, vlens
+
+
+def split_into_sstables(keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
+                        tier: str, level: int, created_at: int,
+                        target_bytes: int) -> list[SSTable]:
+    """Splits a merged run into SSTables of ~target_bytes each."""
+    if len(keys) == 0:
+        return []
+    sizes = np.where(vlens == _TOMBSTONE, 0, vlens).astype(np.int64) + KEY_BYTES
+    cum = np.cumsum(sizes)
+    out = []
+    start = 0
+    while start < len(keys):
+        # last index with cum - cum_start <= target
+        base = cum[start] - sizes[start]
+        end = int(np.searchsorted(cum - base, target_bytes)) + 1
+        end = max(end, start + 1)
+        end = min(end, len(keys))
+        out.append(SSTable(keys[start:end], seqs[start:end], vlens[start:end],
+                           tier, level, created_at))
+        start = end
+    return out

@@ -1,0 +1,163 @@
+"""Workload generators for the HotRAP benchmarks (paper §4).
+
+YCSB-style key distributions (paper §4.2):
+  * hotspot-5%: 95% of operations uniformly hit 5% of records; the
+    remaining 5% of operations uniformly hit the other 95%;
+  * zipfian: P(k-th hottest) ∝ 1/k^0.99, with the standard YCSB
+    scrambled mapping from rank to key so hot keys are spread over the
+    key space;
+  * uniform.
+
+Read-write mixes (paper Table 2): RO 100%R, RW 75%R/25%I, WH 50%R/50%I,
+UH 50%R/50%U (update-heavy draws update keys from the *same* skewed
+distribution as reads — the paper's worst case for HotRAP).
+
+Twitter-like traces (paper §4.3): we do not ship the raw Twitter traces;
+`twitter_like_trace` synthesises a trace with a prescribed read ratio,
+*sunk*-read fraction (reads whose key was last written > 5% of DB size
+ago) and *hot*-read fraction (reads whose key was read < 5% of DB size
+ago), the two axes of paper Fig. 9.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+OP_READ, OP_INSERT, OP_UPDATE = 0, 1, 2
+
+MIXES = {
+    "RO": (1.00, 0.00, 0.00),
+    "RW": (0.75, 0.25, 0.00),
+    "WH": (0.50, 0.50, 0.00),
+    "UH": (0.50, 0.00, 0.50),
+}
+
+
+def _scramble(x: np.ndarray, n: int) -> np.ndarray:
+    """FNV-ish scramble so that rank->key is spread over the key space."""
+    h = (x.astype(np.uint64) * np.uint64(0x9E3779B97F4A7C15)) \
+        >> np.uint64(17)
+    return (h % np.uint64(n)).astype(np.int64)
+
+
+@dataclasses.dataclass
+class KeyDist:
+    kind: str                  # "hotspot", "zipfian", "uniform"
+    n_keys: int
+    hot_frac: float = 0.05     # hotspot: fraction of records that are hot
+    hot_ops: float = 0.95      # hotspot: fraction of ops hitting hot set
+    zipf_s: float = 0.99
+    hot_offset: float = 0.0    # shift the hotspot (dynamic workloads)
+
+    def sample(self, rng: np.random.Generator, m: int) -> np.ndarray:
+        n = self.n_keys
+        if self.kind == "uniform":
+            return rng.integers(0, n, size=m)
+        if self.kind == "hotspot":
+            # YCSB hashes insertion order -> the hot *logical* range is
+            # scattered over the key space (this scattering is what
+            # defeats SSTable/block-granularity promotion, limitation 2).
+            n_hot = max(1, int(self.hot_frac * n))
+            start = int(self.hot_offset * n) % n
+            hot = rng.random(m) < self.hot_ops
+            offs = np.where(hot,
+                            rng.integers(0, n_hot, size=m),
+                            n_hot + rng.integers(0, max(n - n_hot, 1),
+                                                 size=m))
+            return _scramble((start + offs) % n, n)
+        if self.kind == "zipfian":
+            # draw ranks by inverse-CDF over 1/k^s, then scramble
+            ranks = np.arange(1, n + 1, dtype=np.float64)
+            w = 1.0 / np.power(ranks, self.zipf_s)
+            cdf = np.cumsum(w)
+            cdf /= cdf[-1]
+            u = rng.random(m)
+            r = np.searchsorted(cdf, u)
+            return _scramble(r, n)
+        raise ValueError(self.kind)
+
+
+@dataclasses.dataclass
+class Workload:
+    ops: np.ndarray            # (m,) op codes
+    keys: np.ndarray           # (m,) key indices
+    value_len: int
+
+
+def ycsb(mix: str, dist: KeyDist, n_ops: int, value_len: int,
+         seed: int = 0) -> Workload:
+    rng = np.random.default_rng(seed)
+    r, i, u = MIXES[mix]
+    ops = rng.choice([OP_READ, OP_INSERT, OP_UPDATE], size=n_ops,
+                     p=[r, i, u])
+    keys = dist.sample(rng, n_ops)
+    # inserts append fresh keys beyond the loaded range
+    n_ins = int((ops == OP_INSERT).sum())
+    if n_ins:
+        keys = keys.copy()
+        keys[ops == OP_INSERT] = dist.n_keys + np.arange(n_ins)
+    return Workload(ops, keys, value_len)
+
+
+def load_keys(n_keys: int, seed: int = 0) -> np.ndarray:
+    """Load-phase insertion order (shuffled, like YCSB load)."""
+    rng = np.random.default_rng(seed + 1)
+    keys = np.arange(n_keys)
+    rng.shuffle(keys)
+    return keys
+
+
+def twitter_like_trace(n_keys: int, n_ops: int, read_ratio: float,
+                       sunk_frac: float, hot_frac: float, value_len: int,
+                       seed: int = 0) -> Workload:
+    """Synthetic trace with prescribed (read ratio, sunk-read fraction,
+    hot-read fraction) — the axes of paper Fig. 9.
+
+    * a `hot` read re-reads a recently-read key (drawn from a small
+      working set) — promotable;
+    * a `sunk` read targets keys that have not been written recently
+      (the bottom of the key space, which the load phase left in SD);
+    * other reads hit recently-written keys (still in FD);
+    * writes update a skewed subset (recently-written set).
+    """
+    rng = np.random.default_rng(seed)
+    ops = np.where(rng.random(n_ops) < read_ratio, OP_READ, OP_UPDATE)
+    keys = np.zeros(n_ops, dtype=np.int64)
+    hot_set = rng.integers(0, n_keys, size=max(1, int(0.03 * n_keys)))
+    recent_w = rng.integers(0, n_keys, size=max(1, int(0.10 * n_keys)))
+    for j in range(n_ops):
+        if ops[j] == OP_READ:
+            u = rng.random()
+            if u < hot_frac * sunk_frac:
+                # hot AND sunk: the promotable class
+                keys[j] = hot_set[rng.integers(len(hot_set))]
+            elif u < sunk_frac:
+                keys[j] = rng.integers(0, n_keys)      # sunk, cold
+            else:
+                keys[j] = recent_w[rng.integers(len(recent_w))]
+        else:
+            keys[j] = recent_w[rng.integers(len(recent_w))]
+    return Workload(ops, keys, value_len)
+
+
+def dynamic_stages(n_keys: int, ops_per_stage: int, value_len: int,
+                   seed: int = 0) -> list[tuple[str, Workload]]:
+    """Paper Fig. 15: uniform, then hotspot 2→4→6→8→5→5'(shifted)→3→1%.
+
+    Expanding hotspots contain the previous one; the second 5% stage is
+    non-overlapping with the first; shrinking ones are contained."""
+    stages = [("uniform", None), ("hs2", 0.02), ("hs4", 0.04),
+              ("hs6", 0.06), ("hs8", 0.08), ("hs5a", 0.05),
+              ("hs5b", 0.05), ("hs3", 0.03), ("hs1", 0.01)]
+    out = []
+    for si, (name, frac) in enumerate(stages):
+        if frac is None:
+            dist = KeyDist("uniform", n_keys)
+        else:
+            offset = 0.5 if name == "hs5b" else 0.0   # non-overlapping shift
+            dist = KeyDist("hotspot", n_keys, hot_frac=frac,
+                           hot_offset=offset)
+        out.append((name, ycsb("RO", dist, ops_per_stage, value_len,
+                               seed=seed + si)))
+    return out

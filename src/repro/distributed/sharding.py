@@ -1,0 +1,144 @@
+"""Logical-axis sharding.
+
+Model code annotates tensors with *logical* axes; the launcher binds
+them to physical mesh axes:
+
+    dp    batch / token parallelism      -> ("data",) | ("pod", "data")
+    tp    tensor / expert parallelism    -> ("model",)
+    fsdp  weight sharding (ZeRO-3 style) -> ("data",)
+    sp    sequence sharding of the residual stream / KV caches
+          -> ("model",) when enabled (Megatron-style sequence
+          parallelism: shrinks the scan-carry remat footprint by
+          |model|), () to disable.
+
+When no binding is active (unit tests, single-device smoke runs) the
+constraints are no-ops, so model code never needs a mesh to run.
+Dims whose size does not divide the bound axes fall back to unsharded
+(e.g. gemma3's 8 heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+DP = "dp"
+TP = "tp"
+FSDP = "fsdp"
+SP = "sp"
+VOCAB = "vocab"        # vocab dim of embed/lm_head (static: model axis)
+EMBED_D = "embed_d"    # d_model dim of embed/lm_head (static: data axis)
+MOEG = "moe_g"         # MoE token-group dim (dp [+ sp under context par.])
+
+_BINDING: dict | None = None
+
+
+def set_mesh_axes(dp=("data",), tp=("model",), fsdp=("data",),
+                  sp=(), vocab=("model",), embed_d=("data",),
+                  moe_g=None, mesh=None) -> None:
+    global _BINDING
+    _BINDING = {DP: tuple(dp), TP: tuple(tp), FSDP: tuple(fsdp),
+                SP: tuple(sp), VOCAB: tuple(vocab),
+                EMBED_D: tuple(embed_d),
+                MOEG: tuple(moe_g) if moe_g is not None else tuple(dp),
+                "mesh": mesh}
+
+
+def clear_mesh_axes() -> None:
+    global _BINDING
+    _BINDING = None
+
+
+@contextlib.contextmanager
+def mesh_axes(**kw):
+    global _BINDING
+    prev = _BINDING
+    set_mesh_axes(**kw)
+    try:
+        yield
+    finally:
+        _BINDING = prev
+
+
+def axis_size(logical: str) -> int:
+    """Product of bound mesh axis sizes for a logical axis (1 if unbound)."""
+    if _BINDING is None or _BINDING.get("mesh") is None:
+        return 1
+    mesh = _BINDING["mesh"]
+    n = 1
+    for a in _BINDING.get(logical, ()):
+        n *= mesh.shape[a]
+    return n
+
+
+def _phys(d):
+    phys = _BINDING[d]
+    if not phys:
+        return None
+    return phys[0] if len(phys) == 1 else phys
+
+
+def sp_active() -> bool:
+    """True when SP binds at least one axis not claimed by TP or DP —
+    i.e. sequence dims are *actually* sharded (context parallelism)."""
+    if _BINDING is None:
+        return False
+    extra = set(_BINDING[SP]) - set(_BINDING[TP]) - set(_BINDING[DP])
+    if not extra:
+        return False
+    mesh = _BINDING.get("mesh")
+    if mesh is None:
+        return True
+    n = 1
+    for a in extra:
+        n *= mesh.shape[a]
+    return n > 1
+
+
+def logical_spec(*dims, shape=None) -> P:
+    """Translate logical dims (None | dp | tp | fsdp | sp | ...) to a
+    PartitionSpec.  Dims that don't divide the bound axes (when `shape`
+    is given) fall back to None, and a physical axis already claimed by
+    an earlier dim is dropped (recipes may bind e.g. dp=("data","model")
+    and sp=("model",) simultaneously — first dim wins)."""
+    if _BINDING is None:
+        return P()
+    mesh = _BINDING.get("mesh")
+
+    def size_of(axes):
+        n = 1
+        if mesh is not None:
+            for a in axes:
+                n *= mesh.shape[a]
+        return n
+
+    out = []
+    used: set = set()
+    for i, d in enumerate(dims):
+        if d is None:
+            out.append(None)
+            continue
+        phys = tuple(a for a in _BINDING[d] if a not in used)
+        # drop trailing axes until the dim divides (e.g. a 16-group
+        # tensor under fsdp=("data","model") shards over data only)
+        while phys and shape is not None and size_of(phys) > 1 \
+                and shape[i] % size_of(phys) != 0:
+            phys = phys[:-1]
+        if not phys or size_of(phys) == 1 and mesh is not None:
+            out.append(None)
+            continue
+        used.update(phys)
+        out.append(phys[0] if len(phys) == 1 else phys)
+    return P(*out)
+
+
+def shard(x, *dims):
+    """with_sharding_constraint under the active logical binding."""
+    if _BINDING is None:
+        return x
+    assert len(dims) == x.ndim, (dims, x.shape)
+    spec = logical_spec(*dims, shape=x.shape)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,49 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Each op auto-selects interpret mode off-TPU (the kernel body executes
+in Python on CPU for correctness validation) and compiles the real
+Mosaic kernel on TPU.  `ref.py` holds the pure-jnp oracles; tests sweep
+shapes/dtypes asserting allclose between the two.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .ralt_score import ralt_update as _ralt_update
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret=None):
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k_cache, v_cache, valid_len, *,
+                     block_s: int = 512, interpret=None):
+    return _decode_attention(q, k_cache, v_cache, valid_len,
+                             block_s=block_s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "block_n",
+                                             "interpret"))
+def ralt_update(ticks, scores, hits, now, threshold, *,
+                alpha: float = 0.999, block_n: int = 1024,
+                interpret=None):
+    return _ralt_update(ticks, scores, hits, now, threshold, alpha,
+                        block_n=block_n, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(x, Bm, Cm, dt, A, *, interpret=None):
+    return _ssd_scan(x, Bm, Cm, dt, A, interpret=interpret)

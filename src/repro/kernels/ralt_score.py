@@ -1,0 +1,90 @@
+"""Pallas TPU kernel for the RALT exponential-smoothing score update.
+
+The paper's hot path (HotRAP §3.2): every record access updates
+(tick, score) with  score' = alpha^(now - tick) * score + hit.  On TPU
+the tracker is a dense score table (DESIGN.md #3) updated once per
+serving step for every tracked unit (KV pages / experts / vocab rows) —
+a bandwidth-bound elementwise sweep that fuses the decay, the hit
+accumulation and the hot-set threshold compare into one pass so the
+table is read/written exactly once.
+
+Grid: 1-D over row tiles of the (padded) table; block (block_n, 128)
+lanes.  Outputs: new ticks, new scores, and the is-hot bitmap (score
+>= threshold) used by the promotion pathways.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F32 = jnp.float32
+
+
+def _ralt_kernel(ticks_ref, scores_ref, hits_ref, now_ref, thresh_ref,
+                 new_ticks_ref, new_scores_ref, hot_ref, *, log_alpha):
+    now = now_ref[0, 0]
+    thresh = thresh_ref[0, 0]
+    ticks = ticks_ref[...]
+    scores = scores_ref[...].astype(F32)
+    hits = hits_ref[...].astype(F32)
+    dt = (now - ticks).astype(F32)
+    decay = jnp.exp(log_alpha * dt)          # alpha^(now - tick)
+    new_scores = scores * decay + hits
+    new_ticks_ref[...] = jnp.full_like(ticks, now)
+    new_scores_ref[...] = new_scores
+    hot_ref[...] = (new_scores >= thresh).astype(jnp.int8)
+
+
+def ralt_update(ticks, scores, hits, now, threshold, alpha, *,
+                block_n: int = 1024, interpret: bool | None = None):
+    """ticks: (N,) int32; scores: (N,) f32; hits: (N,) bool/int;
+    now/threshold: scalars.  Returns (new_ticks, new_scores, hot_i8)."""
+    (N,) = ticks.shape
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lanes = 128
+    rows = max((N + lanes - 1) // lanes, 1)
+    pad = rows * lanes - N
+
+    def to2d(x, fill):
+        x = jnp.pad(x, (0, pad), constant_values=fill)
+        return x.reshape(rows, lanes)
+
+    t2 = to2d(ticks.astype(jnp.int32), 0)
+    s2 = to2d(scores.astype(F32), 0.0)
+    h2 = to2d(hits.astype(jnp.int8), 0)
+    block_rows = min(block_n // lanes if block_n >= lanes else 1, rows)
+    while rows % block_rows:
+        block_rows -= 1
+    grid = (rows // block_rows,)
+    kernel = functools.partial(_ralt_kernel,
+                               log_alpha=math.log(alpha))
+    nt, ns, hot = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+            jax.ShapeDtypeStruct((rows, lanes), F32),
+            jax.ShapeDtypeStruct((rows, lanes), jnp.int8),
+        ],
+        interpret=interpret,
+    )(t2, s2, h2,
+      jnp.asarray(now, jnp.int32).reshape(1, 1),
+      jnp.asarray(threshold, F32).reshape(1, 1))
+    return (nt.reshape(-1)[:N], ns.reshape(-1)[:N], hot.reshape(-1)[:N])

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately naive (O(S^2) attention, full materialization) — these are
+the semantics contract, not the fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    """q: (B, Sq, H, D); k/v: (B, Skv, KVH, D) -> (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    _, Skv, KVH, _ = k.shape
+    G = H // KVH
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), k.astype(F32))
+    s = s * (D ** -0.5)
+    pq = jnp.arange(Sq)[:, None]
+    pk = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= pk <= pq
+    if window is not None:
+        mask &= (pq - pk) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(F32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, valid_len):
+    """q: (B, H, D); caches: (B, S, KVH, D); valid_len: scalar int.
+    -> (B, H, D)."""
+    B, H, D = q.shape
+    _, S, KVH, _ = k_cache.shape
+    G = H // KVH
+    k = jnp.repeat(k_cache, G, axis=2).astype(F32)
+    v = jnp.repeat(v_cache, G, axis=2).astype(F32)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(F32), k) * (D ** -0.5)
+    mask = jnp.arange(S)[None, None, :] < valid_len
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", w, v).astype(q.dtype)
+
+
+def ralt_update_ref(ticks, scores, hits, now, alpha):
+    """The paper's exponential-smoothing score update (RALT §3.2).
+
+    ticks/scores: (N,) current records; hits: (N,) bool — accessed in
+    this batch; now: scalar current time slice.  Decay every record to
+    `now` and add 1 for hits:  score' = alpha^(now-tick)*score + hit.
+    """
+    decay = jnp.power(jnp.asarray(alpha, F32),
+                      (now - ticks).astype(F32))
+    new_scores = scores.astype(F32) * decay + hits.astype(F32)
+    new_ticks = jnp.full_like(ticks, now)
+    return new_ticks, new_scores
+
+
+def ssd_chunk_ref(x, Bm, Cm, dt, A, h0):
+    """Mamba2 SSD over chunks (oracle for the ssd_scan kernel).
+
+    x: (B, nC, Q, nh, hp); Bm/Cm: (B, nC, Q, ns); dt: (B, nC, Q, nh);
+    A: (nh,) negative decay rates; h0: (B, nh, ns, hp).
+    Returns (y: like x, h_final).
+    """
+    Bsz, nC, Q, nh, hp = x.shape
+    ns = Bm.shape[-1]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(hstate, inp):
+        xq, Bq, Cq, dtq = inp
+        dA = dtq * A                                       # (B,Q,nh)
+        La = jnp.cumsum(dA, axis=1)
+        seg = La[:, :, None, :] - La[:, None, :, :]
+        M = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bqn,bsn->bqs", Cq, Bq)
+        W = CB[..., None] * M * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", W, xq.astype(F32))
+        y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp", Cq, jnp.exp(La), hstate)
+        dBx_w = jnp.exp(La[:, -1, None, :] - La) * dtq
+        new_state = (hstate * jnp.exp(La[:, -1, :])[:, :, None, None]
+                     + jnp.einsum("bqn,bqh,bqhp->bhnp", Bq, dBx_w,
+                                  xq.astype(F32)))
+        return new_state, y_intra
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(F32),
+          jnp.moveaxis(Bm, 1, 0).astype(F32),
+          jnp.moveaxis(Cm, 1, 0).astype(F32),
+          jnp.moveaxis(dt, 1, 0).astype(F32))
+    # recompute inter-chunk term inside scan for the oracle
+    def step(h, inp):
+        xq, Bq, Cq, dtq = inp
+        h_new, y_intra = chunk_step(h, inp)
+        dA = dtq * A
+        La = jnp.cumsum(dA, axis=1)
+        y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp", Cq, jnp.exp(La), h)
+        return h_new, y_intra + y_inter
+
+    h_final, ys = jax.lax.scan(step, h0.astype(F32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_final

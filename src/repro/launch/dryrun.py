@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the
+# device count on first init).  This module is the only place the 512
+# placeholder devices exist; tests/benches see the real single device.
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape
+x mesh) cell and extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Per cell this prints/saves: per-device memory analysis (proves it
+fits), cost analysis, parsed per-device FLOPs & collective wire bytes
+(launch.hlo_analysis — cost_analysis() visits scan bodies once, the
+parser multiplies by trip count), and the v5e roofline terms.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.shapes import SHAPES, applicable
+from ..models.config import ModelConfig
+from .hlo_analysis import analyze
+from .mesh import make_production_mesh
+from .steps import TrainOptions, lower_cell, plan_cell
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (~ per-device collective bw)
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); decode: D = batch tokens."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.batch * shape.seq
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.batch * shape.seq
+    return 2.0 * n * shape.batch          # one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str | None = None, microbatch: int = 1,
+             recipe: str | None = None, tag: str = "",
+             kv_quant: bool = False, verbose: bool = True) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if recipe is None:
+        recipe = DEFAULT_RECIPE.get((arch, shape_name, mesh_name)) or \
+            DEFAULT_RECIPE.get((arch, shape_name)) or \
+            DEFAULT_RECIPE.get(arch, "tp")
+    cell = f"{arch}/{shape_name}/{mesh_name}" + (f"#{tag}" if tag else "")
+    if not applicable(cfg, shape):
+        rec = {"cell": cell, "status": "SKIP",
+               "reason": "long_500k requires sub-quadratic attention "
+                         "(DESIGN.md #5)"}
+        if verbose:
+            print(f"[dryrun] {cell}: SKIP ({rec['reason']})", flush=True)
+        _save(rec, out_dir, arch, shape_name, mesh_name, tag)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    from ..optim import AdamWConfig
+    topts = TrainOptions(
+        microbatch=microbatch,
+        opt=AdamWConfig(moment_dtype=MOMENT_DTYPE.get(arch, "float32")))
+    plan = plan_cell(cfg, shape, mesh, topts=topts, recipe=recipe)
+    lowered = lower_cell(plan)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_dict(compiled.memory_analysis())
+    cost = dict(compiled.cost_analysis() or {})
+    hlo = compiled.as_text()
+    stats = analyze(hlo)
+    from .hlo_analysis import f32_shadow_bytes
+    shadow = f32_shadow_bytes(hlo)
+    mem["f32_shadow_bytes"] = shadow          # CPU-only bf16-dot copies
+    mem["temp_tpu_corrected"] = max(
+        mem.get("temp_size_in_bytes", 0) - shadow, 0)
+
+    mf = model_flops(cfg, shape)
+    # post-SPMD HLO is the per-device program: stats.flops is per chip
+    compute_s = stats.flops / PEAK_FLOPS
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    memory_s = stats.hbm_bytes / HBM_BW
+    collective_s = stats.collective_bytes / ICI_BW
+
+    rec = {
+        "cell": cell, "status": "OK",
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "recipe": recipe, "microbatch": microbatch,
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        "cost_analysis_flops": float(cost.get("flops", 0.0)),
+        "cost_analysis_bytes": bytes_acc,
+        "parsed_flops_per_device": stats.flops,
+        "hbm_bytes_per_device": stats.hbm_bytes,
+        "convert_bytes_per_device": stats.convert_bytes,
+        "memory_s_tpu_corrected": (stats.hbm_bytes
+                                   - stats.convert_bytes) / HBM_BW,
+        "collective_bytes_per_device": stats.collective_bytes,
+        "collective_by_kind": {k: float(v) for k, v
+                               in stats.collective_by_kind.items()},
+        "model_flops_global": mf,
+        "useful_flops_ratio": (mf / (stats.flops * n_chips)
+                               if stats.flops else 0.0),
+        "roofline_terms_s": {
+            "compute": compute_s,
+            "memory": memory_s,
+            "collective": collective_s,
+        },
+        "bottleneck": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda kv: kv[1])[0],
+    }
+    if verbose:
+        mb = mem.get("temp_tpu_corrected", 0) / 2**30
+        ab = mem.get("argument_size_in_bytes", 0) / 2**30
+        print(f"[dryrun] {cell}: OK lower={t_lower:.0f}s "
+              f"compile={t_compile:.0f}s args={ab:.2f}GiB "
+              f"temp*={mb:.2f}GiB flops/dev={stats.flops:.3e} "
+              f"coll/dev={stats.collective_bytes:.3e}B "
+              f"terms(c/m/coll)={compute_s:.4f}/{memory_s:.4f}/"
+              f"{collective_s:.4f}s -> {rec['bottleneck']}", flush=True)
+    _save(rec, out_dir, arch, shape_name, mesh_name, tag)
+    return rec
+
+
+def _save(rec, out_dir, arch, shape_name, mesh_name, tag=""):
+    if not out_dir:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape_name}__{mesh_name}"
+    if tag:
+        name += f"__{tag}"
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+# ----------------------------------------------------------------------
+# per-cell baseline knobs (EXPERIMENTS.md §Perf records the path)
+# ----------------------------------------------------------------------
+# sharding recipe: dense archs train/prefill in pure-FSDP + context
+# parallelism (no activation all-reduces); MoE archs need the model
+# axis for expert parallelism; decode cells ignore the recipe.
+DENSE = ("musicgen-large", "stablelm-3b", "llama3-8b", "minitron-8b",
+         "gemma3-4b", "internvl2-1b", "mamba2-1.3b", "zamba2-7b",
+         # mixtral: 8 experts can't EP-shard a 16-way model axis (the
+         # tp recipe replicates expert compute 16x) => pure FSDP, with
+         # G=|dp| group-local dispatch
+         "mixtral-8x22b")
+DEFAULT_RECIPE = {}
+for _a in DENSE:
+    DEFAULT_RECIPE[(_a, "train_4k")] = "fsdp"
+    DEFAULT_RECIPE[(_a, "prefill_32k")] = "fsdp"
+# qwen3: 128 experts EP-shard the model axis; batch covers the mesh
+DEFAULT_RECIPE[("qwen3-moe-235b-a22b", "train_4k")] = "ep"
+DEFAULT_RECIPE[("qwen3-moe-235b-a22b", "prefill_32k")] = "ep"
+# mixtral per-mesh (§Perf cell B): fsdp wins single-pod train (45 vs
+# 60 s collective) but intra-expert ff-TP wins prefill and all
+# multi-pod cells (the 512-group fsdp dispatch replicates)
+DEFAULT_RECIPE[("mixtral-8x22b", "prefill_32k")] = "tp"
+DEFAULT_RECIPE[("mixtral-8x22b", "train_4k", "pod2x16x16")] = "tp"
+DEFAULT_RECIPE[("mixtral-8x22b", "prefill_32k", "pod2x16x16")] = "tp"
+
+# per-cell grad-accumulation overrides (fit the 16 GiB/chip budget)
+MICROBATCH = {}
+
+# optimizer-moment dtype: the 235B/141B MoE param+moment streams exceed
+# 16 GiB/chip with f32 moments at 256 chips (2.3 TB global state)
+MOMENT_DTYPE = {"qwen3-moe-235b-a22b": "bfloat16",
+                "mixtral-8x22b": "bfloat16"}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--recipe", choices=["tp", "fsdp"], default=None,
+                    help="override the per-cell default sharding recipe")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the saved JSON (perf iterations)")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="int8 decode KV cache (§Perf iteration #13)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) \
+        else [args.multi_pod]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                try:
+                    mb = args.microbatch if args.microbatch else \
+                        MICROBATCH.get((arch, shape_name), 1)
+                    run_cell(arch, shape_name, multi_pod=mp,
+                             out_dir=args.out, recipe=args.recipe,
+                             tag=args.tag, microbatch=mb,
+                             kv_quant=args.kv_quant)
+                except Exception:
+                    failures.append(f"{arch}/{shape_name}/"
+                                    f"{'multi' if mp else 'single'}")
+                    traceback.print_exc()
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}", flush=True)
+        return 1
+    print("[dryrun] all cells OK", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

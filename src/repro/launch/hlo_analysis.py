@@ -1,0 +1,447 @@
+"""Static analysis of optimized (post-SPMD) HLO text.
+
+`compiled.cost_analysis()` visits while bodies once, so a scan-over-
+layers program under-reports FLOPs/bytes by ~n_layers.  This module
+re-walks the HLO text and multiplies every op by the product of
+enclosing while-loop trip counts (XLA annotates
+`backend_config={"known_trip_count":{"n":...}}`; the loop-condition
+constant is the fallback), giving per-device totals for:
+
+  * dot/convolution FLOPs (compute roofline term)
+  * collective wire bytes per device, by op kind, under a ring model:
+      all-reduce         2 x shard bytes        (reduce-scatter+gather)
+      all-gather         output - input bytes
+      reduce-scatter     input - output bytes
+      all-to-all         input bytes
+      collective-permute input bytes
+  * per-op counts for the perf log (e.g. spotting duplicate all-gathers)
+
+Operands are printed without shapes in optimized dumps, so shapes are
+resolved through a per-computation (then module-wide) name -> out-shape
+map.  The parser is deliberately text-based (`compiled.as_text()`), so
+benchmarks/roofline can re-run it on saved dumps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(")
+_OP_RE = re.compile(
+    r"(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\((?:[^()]|\([^()]*\))*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+    r"([\w\-]+)\(")
+_CALL_RE = re.compile(
+    r"(?:condition|body|branch_computations|to_apply|called_computations"
+    r"|calls)=({[^}]*}|%?[\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[16,4096]{1,0}' -> bytes.  Tuples: sum over elements."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(shape_str: str) -> int:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    out_shape: str
+    operands: list          # operand instruction names
+    attrs: str              # text after the operand list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+    shapes: dict            # name -> out_shape within this computation
+
+
+def _split_call(rest: str):
+    """rest starts right after 'kind(' -- return (operand_blob, attrs)."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return rest[:i], rest[i + 1:]
+    return rest, ""
+
+
+def parse_computations(hlo_text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace():
+            h = _HEADER_RE.match(line)
+            if h and line.rstrip().endswith("{"):
+                cur = Computation(name=h.group(2), ops=[], shapes={})
+                comps[cur.name] = cur
+                if h.group(1):
+                    comps["__entry__"] = cur
+                continue
+        stripped = line.strip()
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(stripped)
+        if not m:
+            continue
+        op_name, out_shape, kind = m.groups()
+        rest = stripped[m.end():]
+        blob, attrs = _split_call(rest)
+        operands = re.findall(r"%([\w\.\-]+)", blob)
+        op = Op(name=op_name, kind=kind, out_shape=out_shape,
+                operands=operands, attrs=attrs)
+        cur.ops.append(op)
+        cur.shapes[op_name] = out_shape
+    # parameters: "%name = f32[..] parameter(0)" are ops too (kind
+    # parameter) and land in shapes via the same path.
+    return comps
+
+
+def _resolve(comp: Computation, global_shapes: dict, name: str) -> str:
+    return comp.shapes.get(name) or global_shapes.get(name, "")
+
+
+def _cond_trip_count(comps: dict, cond_name: str) -> int:
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops:
+        if op.kind == "constant" and re.match(r"[su]\d+\[\]", op.out_shape):
+            m = re.search(r"constant\((-?\d+)\)", "constant(" + op.attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _callees(op: Op) -> dict:
+    out = {}
+    for m in _CALL_RE.finditer(op.attrs):
+        blob = m.group(1)
+        role = m.group(0).split("=")[0]
+        for name in re.findall(r"%?([\w\.\-]+)", blob):
+            out[name] = role
+    return out
+
+
+def _dot_flops(op: Op, lhs_shape: str) -> int:
+    out_elems = shape_elems(op.out_shape)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contracted = 1
+    dims = _SHAPE_RE.search(lhs_shape)
+    if m and dims:
+        sizes = [int(d) for d in dims.group(2).split(",") if d]
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(sizes):
+                contracted *= sizes[int(idx)]
+    return 2 * out_elems * contracted
+
+
+def _conv_flops(op: Op, kern_shape: str) -> int:
+    out_elems = shape_elems(op.out_shape)
+    kern = _SHAPE_RE.search(kern_shape)
+    if not kern:
+        return 2 * out_elems
+    ksizes = [int(d) for d in kern.group(2).split(",") if d]
+    return 2 * out_elems * max(1, _prod(ksizes[:-1]))
+
+
+def _prod(xs):
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+# ops that don't move HBM bytes themselves (views/metadata/control flow
+# — while/call/fusion boundaries are handled explicitly in analyze())
+_NO_BYTES = {"tuple", "get-tuple-element", "parameter", "bitcast",
+             "constant", "after-all", "partition-id", "replica-id",
+             "while", "call", "conditional", "custom-call", "iota",
+             "rng-bit-generator", "rng", "domain", "opt-barrier"}
+
+
+_PURE_MOVE = {"convert", "bitcast", "copy", "transpose", "broadcast",
+              "reshape", "parameter", "tuple", "get-tuple-element",
+              "constant"}
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    convert_bytes: float = 0.0   # pure dtype/layout-movement fusions
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_kind: dict = dataclasses.field(default_factory=dict)
+    collective_count: int = 0
+    dot_count: int = 0
+    op_histogram: dict = dataclasses.field(default_factory=dict)
+    collective_ops: list = dataclasses.field(default_factory=list)
+    hbm_by_op: dict = dataclasses.field(default_factory=dict)
+
+    def top_hbm(self, n=12):
+        return sorted(self.hbm_by_op.items(), key=lambda kv: -kv[1])[:n]
+
+    def add_collective(self, kind, nbytes, mult, name=""):
+        self.collective_bytes += nbytes * mult
+        self.collective_by_kind[kind] = (
+            self.collective_by_kind.get(kind, 0.0) + nbytes * mult)
+        self.collective_count += mult
+        self.collective_ops.append((name, kind, nbytes, mult))
+
+
+def analyze(hlo_text: str) -> HloStats:
+    comps = parse_computations(hlo_text)
+    entry = comps.get("__entry__")
+    stats = HloStats()
+    if entry is None:
+        return stats
+    global_shapes: dict[str, str] = {}
+    for c in comps.values():
+        global_shapes.update(c.shapes)
+
+    def fusion_bytes(op: Op, comp: Computation) -> float:
+        """Boundary bytes of a fusion, slice-aware: a parameter whose
+        only interior consumers are (dynamic-)slice/gather is charged
+        at the slice size (a scan body's dynamic-slice of stacked
+        params would otherwise charge the full (L, ...) array every
+        iteration); an in-place DUS root charges the update only."""
+        callee = next((n for n in _callees(op) if n in comps), None)
+        fused = comps.get(callee)
+        out = shape_bytes(op.out_shape)
+        if fused is None:
+            return out + sum(shape_bytes(_resolve(comp, global_shapes, o))
+                             for o in op.operands)
+        params = {o.name: o for o in fused.ops if o.kind == "parameter"}
+        total = 0.0
+        for pname, pop in params.items():
+            full = shape_bytes(pop.out_shape)
+            charged = 0.0
+            ok = True
+            for c in fused.ops:
+                if pname not in c.operands:
+                    continue
+                if c.kind in ("dynamic-slice", "slice", "gather"):
+                    charged += shape_bytes(c.out_shape)
+                elif c.kind == "dynamic-update-slice" \
+                        and c.operands and c.operands[0] == pname:
+                    upd = c.operands[1] if len(c.operands) > 1 else None
+                    charged += shape_bytes(
+                        fused.shapes.get(upd, "")) if upd else full
+                else:
+                    ok = False
+                    break
+            total += min(charged, full) if ok and charged else \
+                (full if not ok else 0.0)
+        # in-place DUS fusion: if an interior DUS updates a
+        # fusion-shaped buffer (XLA aliases it), the output charge is
+        # the update bytes, not the whole buffer — a decode step's
+        # write of one token into the stacked KV cache would otherwise
+        # charge the full cache every layer.
+        for o in fused.ops:
+            if o.kind == "dynamic-update-slice" and \
+                    shape_elems(o.out_shape) == shape_elems(op.out_shape):
+                upd = o.operands[1] if len(o.operands) > 1 else None
+                if upd:
+                    out = shape_bytes(fused.shapes.get(upd, "")) or out
+                break
+        return total + out
+
+    def wire_bytes(op: Op, comp: Computation) -> float:
+        inp = sum(shape_bytes(_resolve(comp, global_shapes, o))
+                  for o in op.operands)
+        out = shape_bytes(op.out_shape)
+        kind = op.kind
+        if kind.startswith("all-reduce"):
+            return 2.0 * inp
+        if kind.startswith("all-gather"):
+            return float(max(out - inp, 0))
+        if kind.startswith("reduce-scatter"):
+            return float(max(inp - out, 0))
+        return float(inp)   # all-to-all, collective-permute
+
+    def walk(comp: Computation, mult: int, count_bytes: bool = True):
+        if mult <= 0:
+            return
+        for op in comp.ops:
+            # HBM-traffic model: every non-fused op reads its operands
+            # and writes its output through memory; a fusion moves only
+            # its boundary bytes.  (TPU-realistic; trip-count aware,
+            # unlike cost_analysis()'s single loop-body visit.)
+            # Slicing ops touch only the slice, not the whole buffer
+            # (a dynamic-slice of stacked scan params would otherwise
+            # charge the full (L, ...) array every iteration).
+            if count_bytes and op.kind not in _NO_BYTES:
+                if op.kind == "fusion":
+                    io_bytes = fusion_bytes(op, comp)
+                    callee = next((n for n in _callees(op)
+                                   if n in comps), None)
+                    fused = comps.get(callee)
+                    if fused is not None and all(
+                            o.kind in _PURE_MOVE for o in fused.ops):
+                        # dtype/layout-only movement: bf16<->f32
+                        # promotion copies that don't exist on TPU
+                        stats.convert_bytes += io_bytes * mult
+                elif op.kind in ("convert", "copy", "transpose"):
+                    io_bytes = (shape_bytes(op.out_shape)
+                                + sum(shape_bytes(_resolve(
+                                    comp, global_shapes, o))
+                                    for o in op.operands))
+                    stats.convert_bytes += io_bytes * mult
+                elif op.kind in ("dynamic-slice", "slice", "gather"):
+                    io_bytes = 2 * shape_bytes(op.out_shape)
+                elif op.kind in ("dynamic-update-slice", "scatter"):
+                    ui = 2 if op.kind == "scatter" else 1
+                    upd = (_resolve(comp, global_shapes, op.operands[ui])
+                           if len(op.operands) > ui else op.out_shape)
+                    io_bytes = 3 * shape_bytes(upd)   # r+w slice, r idx
+                else:
+                    io_bytes = shape_bytes(op.out_shape) + sum(
+                        shape_bytes(_resolve(comp, global_shapes, o))
+                        for o in op.operands)
+                stats.hbm_bytes += io_bytes * mult
+                key = f"{op.kind} {op.name}"
+                stats.hbm_by_op[key] = (stats.hbm_by_op.get(key, 0.0)
+                                        + io_bytes * mult)
+            if op.kind == "dot":
+                lhs = _resolve(comp, global_shapes,
+                               op.operands[0]) if op.operands else ""
+                stats.flops += _dot_flops(op, lhs) * mult
+                stats.dot_count += mult
+            elif op.kind == "convolution":
+                kern = _resolve(comp, global_shapes,
+                                op.operands[1]) if len(op.operands) > 1 \
+                    else ""
+                stats.flops += _conv_flops(op, kern) * mult
+            else:
+                base = next((c for c in COLLECTIVES if op.kind == c
+                             or op.kind.startswith(c + "-")), None)
+                if base and not op.kind.endswith("-done"):
+                    stats.add_collective(base, wire_bytes(op, comp), mult,
+                                         op.name)
+            stats.op_histogram[op.kind] = (
+                stats.op_histogram.get(op.kind, 0) + mult)
+            if op.kind == "while":
+                trip = 1
+                m = _TRIP_RE.search(op.attrs)
+                if m:
+                    trip = int(m.group(1))
+                callees = _callees(op)
+                cond = next((n for n, r in callees.items()
+                             if r == "condition"), None)
+                body = next((n for n, r in callees.items()
+                             if r == "body"), None)
+                if not m and cond:
+                    trip = _cond_trip_count(comps, cond)
+                if body and body in comps:
+                    walk(comps[body], mult * max(trip, 1))
+            elif op.kind in ("call", "conditional", "fusion", "custom-call",
+                             "async-start", "map", "sort", "scatter",
+                             "reduce", "reduce-window",
+                             "select-and-scatter"):
+                inner_bytes = op.kind not in ("fusion", "reduce", "map",
+                                              "sort", "scatter",
+                                              "reduce-window",
+                                              "select-and-scatter")
+                for name, role in _callees(op).items():
+                    if name in comps and role != "condition":
+                        walk(comps[name], mult,
+                             count_bytes and inner_bytes)
+
+    walk(entry, 1)
+    return stats
+
+
+def f32_shadow_bytes(hlo_text: str) -> int:
+    """Bytes of f32 loop-carried copies that shadow a same-shape bf16
+    buffer in the same while carry.
+
+    XLA:CPU promotes bf16 dots to f32 and hoists the converts out of
+    loop bodies, so the backward scan carries an f32 copy of every
+    stacked bf16 weight/activation stack.  TPU executes bf16 dots on
+    the MXU natively — these copies do not exist there, so
+    `temp - f32_shadow_bytes` is the TPU-corrected fit estimate
+    (EXPERIMENTS.md §Dry-run documents this correction).
+    """
+    comps = parse_computations(hlo_text)
+    # global set of bf16 shapes (for cross-loop shadow pairs: the fwd
+    # scan saves bf16 stacks that the bwd loop carries as f32)
+    global_bf16 = set(re.findall(r"bf16\[([0-9,]+)\]", hlo_text))
+    total = 0.0
+    for key, comp in comps.items():
+        if key == "__entry__":       # alias of the entry computation
+            continue
+        for op in comp.ops:
+            if op.kind != "while":
+                continue
+            shapes = re.findall(r"(bf16|f32)\[([0-9,]+)\]",
+                                op.out_shape)
+            bf = {}
+            for dt, dims in shapes:
+                if dt == "bf16":
+                    bf[dims] = bf.get(dims, 0) + 1
+            for dt, dims in shapes:
+                if dt != "f32":
+                    continue
+                n = 1
+                for d in dims.split(","):
+                    n *= int(d)
+                if n < (1 << 22):          # ignore small buffers
+                    continue
+                if bf.get(dims, 0) > 0:
+                    bf[dims] -= 1
+                    total += 4 * n         # same-tuple pair: certain
+                elif dims in global_bf16:
+                    total += 2 * n         # cross-loop pair: half credit
+    return int(total)
+
+
+def summarize(stats: HloStats, top: int = 12) -> str:
+    lines = [f"flops/device={stats.flops:.3e}  "
+             f"collective_bytes/device={stats.collective_bytes:.3e}  "
+             f"({stats.collective_count} collective executions)"]
+    for k, v in sorted(stats.collective_by_kind.items(),
+                       key=lambda kv: -kv[1]):
+        lines.append(f"  {k:20s} {v:.3e} B")
+    biggest = sorted(stats.collective_ops, key=lambda t: -t[2] * t[3])[:top]
+    for name, kind, nbytes, mult in biggest:
+        lines.append(f"    {kind:18s} x{mult:<5d} {nbytes:.3e} B  %{name}")
+    return "\n".join(lines)

@@ -1,0 +1,50 @@
+"""Serving launcher.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --requests 8 --prompt-len 16 --max-new 24
+
+Runs the batched engine on a smoke config (CPU) or lowers the full
+config's serve_step on the production mesh (dry-run handled by
+repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..configs import get_config, smoke_config
+from ..serving.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+    cfg = smoke_config(args.arch)
+    eng = ServeEngine(cfg, batch=args.batch,
+                      max_len=args.prompt_len + args.max_new + 8)
+    rng = np.random.default_rng(0)
+    for rid in range(args.requests):
+        eng.submit(Request(
+            rid=rid,
+            prompt=list(rng.integers(0, cfg.vocab, args.prompt_len)),
+            max_new=args.max_new))
+    t0 = time.time()
+    done = eng.run()
+    dt = time.time() - t0
+    tokens = sum(len(r.out) for r in done)
+    print(f"[serve] {len(done)} requests, {tokens} tokens in {dt:.1f}s "
+          f"({tokens / dt:.1f} tok/s)", flush=True)
+    for r in done[:3]:
+        print(f"  req {r.rid}: {r.out[:8]}...", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,239 @@
+"""Step functions (train / prefill / serve) + the cell assembler.
+
+`plan_cell(cfg, shape, mesh)` packages everything the dry-run, the
+trainer and the server need for one (architecture x input-shape x mesh)
+cell: the step callable, ShapeDtypeStruct example arguments (via
+jax.eval_shape — no allocation), and in/out NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.shapes import ShapeSpec, input_specs
+from ..distributed import sharding as shlib
+from ..models.config import ModelConfig
+from ..models.transformer import (cache_specs, decode_step, forward,
+                                  init_cache, init_params, loss_fn,
+                                  param_specs)
+from ..optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .mesh import axis_binding
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainOptions:
+    microbatch: int = 1              # grad-accumulation factor
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    opt: AdamWConfig = AdamWConfig()
+
+
+# ----------------------------------------------------------------------
+# step functions
+# ----------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, topts: TrainOptions):
+    M = topts.microbatch
+
+    def loss_of(p, batch):
+        return loss_fn(p, cfg, batch["tokens"], batch["labels"],
+                       batch.get("frontend_emb"))
+
+    def train_step(params, opt_state, step, batch):
+        if M == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def micro(b):
+                return jax.tree.map(
+                    lambda x: shlib.shard(
+                        x.reshape(M, x.shape[0] // M, *x.shape[1:]),
+                        None, shlib.DP, *([None] * (x.ndim - 1))),
+                    b)
+
+            mb = micro(batch)
+
+            def acc_step(carry, mb_i):
+                loss_acc, g_acc = carry
+                loss_i, g_i = jax.value_and_grad(loss_of)(params, mb_i)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype), g_acc, g_i)
+                return (loss_acc + loss_i, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), g0), mb)
+            loss = loss / M
+            grads = jax.tree.map(lambda g: g / M, grads)
+        lr_scale = cosine_schedule(step, topts.warmup_steps,
+                                   topts.total_steps)
+        new_params, new_state, metrics = adamw_update(
+            params, grads, opt_state, topts.opt, lr_scale)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits, cache = forward(params, cfg, batch["tokens"],
+                                frontend_emb=batch.get("frontend_emb"),
+                                return_cache=True)
+        return logits[:, -1, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = decode_step(params, cfg, cache, tokens, pos)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_cache
+
+    return serve_step
+
+
+# ----------------------------------------------------------------------
+# cell assembler
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class CellPlan:
+    fn: object                 # callable to jit
+    args: tuple                # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: object
+    binding: dict              # logical-axis binding (distributed.sharding)
+    donate_argnums: tuple = ()
+
+
+def _ns(mesh, spec_tree):
+    # None stays None (an *empty subtree*, e.g. the unused `shared`
+    # slot) so sharding trees keep the exact structure of param trees
+    return jax.tree.map(
+        lambda s: None if s is None else NamedSharding(mesh, s),
+        spec_tree, is_leaf=lambda s: s is None or isinstance(s, P))
+
+
+def _batch_specs(specs: dict, binding) -> dict:
+    dp = binding["dp"]
+    dp = dp[0] if len(dp) == 1 else dp
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0:
+            out[k] = P()
+        elif v.shape[0] % _prod_axes(binding, "dp") == 0:
+            out[k] = P(dp, *([None] * (v.ndim - 1)))
+        else:
+            out[k] = P(*([None] * v.ndim))
+    return out
+
+
+def _prod_axes(binding, name):
+    mesh = binding["mesh"]
+    n = 1
+    for a in binding[name]:
+        n *= mesh.shape[a]
+    return n
+
+
+def plan_cell(cfg: ModelConfig, shape: ShapeSpec, mesh,
+              topts: TrainOptions | None = None,
+              recipe: str = "tp", seed: int = 0) -> CellPlan:
+    topts = topts or TrainOptions()
+    seq_over_all = shape.name == "long_500k"
+    has_ssm = any(b.kind == "mamba2" for _, blocks in cfg.stages
+                  for b in blocks)
+    binding = axis_binding(mesh, shape_kind=shape.kind,
+                           seq_over_all=seq_over_all, recipe=recipe,
+                           batch=shape.batch // max(topts.microbatch, 1),
+                           allow_sp=not has_ssm)
+    binding["mesh"] = mesh
+    specs = input_specs(cfg, shape)
+    key = jax.random.key(seed)
+    params_shape = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                                  key)
+    pspecs = param_specs(params_shape, cfg, mesh, dp_axes=binding["dp"],
+                         tp_axes=binding["tp"], fsdp_axes=binding["fsdp"],
+                         vocab_axes=binding["vocab"],
+                         embed_d_axes=binding["embed_d"],
+                         # decode: weight-stationary expert layout
+                         moe_ff_sharded=(shape.kind == "decode"))
+    bspecs = _batch_specs(specs, binding)
+
+    if shape.kind == "train":
+        fn = make_train_step(cfg, topts)
+        opt_shape = jax.eval_shape(
+            functools.partial(adamw_init, cfg=topts.opt), params_shape)
+        ospecs = {"m": pspecs, "v": pspecs, "count": P()}
+        mspecs = {"loss": P(), "grad_norm": P(), "lr": P()}
+        args = (params_shape, opt_shape,
+                jax.ShapeDtypeStruct((), jnp.int32), specs)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, P()),
+                 _ns(mesh, bspecs))
+        out_sh = (_ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, mspecs))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg)
+        cache_shape = _prefill_cache_shape(cfg, shape)
+        cspecs = cache_specs(cache_shape, mesh, dp_axes=binding["dp"],
+                             tp_axes=binding["tp"], seq_axes=binding["seq"])
+        logit_spec = P(binding["dp"][0] if len(binding["dp"]) == 1
+                       else binding["dp"], None)
+        args = (params_shape, specs)
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, bspecs))
+        out_sh = (_ns(mesh, logit_spec), _ns(mesh, cspecs))
+        donate = ()
+    else:  # decode
+        fn = make_serve_step(cfg)
+        cache_shape = jax.eval_shape(
+            lambda: init_cache(cfg, shape.batch, shape.seq))
+        cspecs = cache_specs(cache_shape, mesh, dp_axes=binding["dp"],
+                             tp_axes=binding["tp"], seq_axes=binding["seq"])
+        tok_spec = bspecs["tokens"]
+        args = (params_shape, cache_shape, specs["tokens"], specs["pos"])
+        in_sh = (_ns(mesh, pspecs), _ns(mesh, cspecs),
+                 _ns(mesh, tok_spec), _ns(mesh, P()))
+        out_sh = (_ns(mesh, tok_spec), _ns(mesh, cspecs))
+        donate = (1,)
+    return CellPlan(fn=fn, args=args, in_shardings=in_sh,
+                    out_shardings=out_sh, binding=binding,
+                    donate_argnums=donate)
+
+
+def _prefill_cache_shape(cfg: ModelConfig, shape: ShapeSpec):
+    """Shape tree of forward(..., return_cache=True)'s cache output."""
+    specs = input_specs(cfg, shape)
+    params_shape = jax.eval_shape(functools.partial(init_params, cfg=cfg),
+                                  jax.random.key(0))
+
+    def fwd(p, batch):
+        _, cache = forward(p, cfg, batch["tokens"],
+                           frontend_emb=batch.get("frontend_emb"),
+                           return_cache=True)
+        return cache
+
+    return jax.eval_shape(fwd, params_shape, specs)
+
+
+def lower_cell(plan: CellPlan, fn_name: str = "step"):
+    """jit + lower under the cell's mesh/binding.  Returns `lowered`."""
+    mesh = plan.binding["mesh"]
+    shlib.set_mesh_axes(dp=plan.binding["dp"], tp=plan.binding["tp"],
+                        fsdp=plan.binding["fsdp"], sp=plan.binding["sp"],
+                        vocab=plan.binding["vocab"],
+                        embed_d=plan.binding["embed_d"],
+                        moe_g=plan.binding.get("moe_g"), mesh=mesh)
+    try:
+        jitted = jax.jit(plan.fn, in_shardings=plan.in_shardings,
+                         out_shardings=plan.out_shardings,
+                         donate_argnums=plan.donate_argnums)
+        with mesh:
+            lowered = jitted.lower(*plan.args)
+    finally:
+        shlib.clear_mesh_axes()
+    return lowered

@@ -1,0 +1,3 @@
+from .config import ModelConfig  # noqa: F401
+from .transformer import (init_params, forward, decode_step, init_cache,
+                          param_specs, cache_specs)  # noqa: F401

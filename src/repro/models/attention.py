@@ -1,0 +1,178 @@
+"""GQA attention block: train/prefill forward + single-token decode.
+
+Decode keeps the KV cache *sequence-sharded* over the tp axis (SP for
+inference): the score/softmax/value contractions over the sharded S dim
+lower to partial reductions + small all-reduces instead of gathering
+the cache (required to fit 32k x 128 and 500k caches).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import DP, FSDP, SP, TP, shard
+from .common import F32, NEG_INF, flash_attention, rope, swiglu, rms_norm
+
+
+def init_attn_block(key, cfg, d_ff: int, n_copies: int | None):
+    """Params for one attention(+MLP) block; leading dim when stacked."""
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(k, *shape, fan_in):
+        full = shape if n_copies is None else (n_copies, *shape)
+        return (jax.random.normal(k, full, F32) * fan_in ** -0.5).astype(dt)
+
+    def zeros(*shape):
+        full = shape if n_copies is None else (n_copies, *shape)
+        return jnp.zeros(full, dt)
+
+    return {
+        "norm1": zeros(d),
+        "wq": mk(ks[0], d, H, hd, fan_in=d),
+        "wk": mk(ks[1], d, KV, hd, fan_in=d),
+        "wv": mk(ks[2], d, KV, hd, fan_in=d),
+        "wo": mk(ks[3], H, hd, d, fan_in=H * hd),
+        "norm2": zeros(d),
+        "w_gate": mk(ks[4], d, d_ff, fan_in=d),
+        "w_up": mk(ks[5], d, d_ff, fan_in=d),
+        "w_down": mk(ks[6], d_ff, d, fan_in=d_ff),
+    }
+
+
+def attn_specs(stacked: bool):
+    """PartitionSpec tree (logical dims) matching init_attn_block."""
+    r = ("stack",) if stacked else ()
+    return {
+        "norm1": (*r, None),
+        "wq": (*r, FSDP, TP, None),
+        "wk": (*r, FSDP, TP, None),      # falls back to None if KV % tp != 0
+        "wv": (*r, FSDP, TP, None),
+        "wo": (*r, TP, None, FSDP),
+        "norm2": (*r, None),
+        "w_gate": (*r, FSDP, TP),
+        "w_up": (*r, FSDP, TP),
+        "w_down": (*r, TP, FSDP),
+    }
+
+
+def _qkv(p, x, positions, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(p, x, cfg, window: int | None, positions=None,
+               d_ff: int | None = None, mlp_fn=None):
+    """Training/prefill forward.  x: (B, S, d).  Returns (y, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    h = rms_norm(x, p["norm1"])
+    q, k, v = _qkv(p, h, positions, cfg)
+    q = shard(q, DP, None, TP, None)
+    k = shard(k, DP, SP, None, None)
+    v = shard(v, DP, SP, None, None)
+    c = cfg.flash_chunk
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        q_chunk=min(c, S), kv_chunk=min(c, S))
+    o = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    x = x + o
+    h = rms_norm(x, p["norm2"])
+    if mlp_fn is not None:
+        y = mlp_fn(h)
+    else:
+        y = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    x = x + y
+    return shard(x, DP, SP, None), (k, v)
+
+
+def attn_decode(p, x, cache_k, cache_v, pos, cfg, window: int | None,
+                mlp_fn=None, valid_len=None, slot=None,
+                k_scale=None, v_scale=None):
+    """Single-token decode.  x: (B, d); caches **head-major**
+    (B, KV, S_max, hd), sequence-sharded over tp.  `pos` is the
+    absolute position (RoPE); `slot` the cache index to write (ring
+    position for windowed ring buffers, defaults to pos); `valid_len`
+    the number of valid cache entries.
+    Returns (y, new_k_cache, new_v_cache).
+
+    Layout note (§Perf decode iteration): with the former (B, S, KV,
+    hd) layout, the score dot's batch dims (B, KV) forced XLA to
+    materialize a transposed copy of the whole per-layer cache slice
+    every token (~2x cache bytes/token/layer); head-major caches feed
+    the dot directly."""
+    B, d = x.shape
+    S = cache_k.shape[2]
+    h = rms_norm(x, p["norm1"])
+    positions = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 \
+        else pos[:, None]
+    q = jnp.einsum("bd,dhk->bhk", h, p["wq"])[:, None]
+    k = jnp.einsum("bd,dhk->bhk", h, p["wk"])[:, None]
+    v = jnp.einsum("bd,dhk->bhk", h, p["wv"])[:, None]
+    q = rope(q, positions, cfg.rope_theta)[:, 0]
+    k_new = rope(k, positions, cfg.rope_theta)[:, 0]
+    v_new = v[:, 0]
+    # write the new token at `slot` (sharded dynamic-update-slice)
+    posi = pos if pos.ndim == 0 else pos[0]
+    sloti = posi if slot is None else slot
+    quant = cache_k.dtype == jnp.int8
+    if quant:
+        # int8 KV: per-(token, head) scales; the cache payload halves
+        # (the decode bandwidth floor — §Perf roofline notes)
+        ks = jnp.maximum(jnp.abs(k_new).max(-1), 1e-8).astype(F32) / 127
+        vs = jnp.maximum(jnp.abs(v_new).max(-1), 1e-8).astype(F32) / 127
+        k_w = jnp.round(k_new.astype(F32) / ks[..., None])
+        v_w = jnp.round(v_new.astype(F32) / vs[..., None])
+        k_w = jnp.clip(k_w, -127, 127).astype(jnp.int8)
+        v_w = jnp.clip(v_w, -127, 127).astype(jnp.int8)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(
+            k_scale, ks[:, :, None], sloti, axis=2)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(
+            v_scale, vs[:, :, None], sloti, axis=2)
+    else:
+        k_w, v_w = k_new, v_new
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_w[:, :, None].astype(cache_k.dtype), sloti, axis=2)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_w[:, :, None].astype(cache_v.dtype), sloti, axis=2)
+    cache_k = shard(cache_k, DP, None, TP, None)
+    cache_v = shard(cache_v, DP, None, TP, None)
+    # attention over the S-sharded cache: partial softmax + all-reduce
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bhgk,bhsk->bhgs", qg.astype(F32)
+                   if quant else qg,
+                   cache_k.astype(F32 if quant else qg.dtype),
+                   preferred_element_type=F32) * (hd ** -0.5)
+    if quant:   # fold the k scales in post-dot (no dequantized cache)
+        s = s * k_scale[:, :, None, :]
+    s = shard(s, DP, None, None, TP)
+    pk = jnp.arange(S)
+    vlen = (posi + 1) if valid_len is None else valid_len
+    mask = pk < vlen
+    if window is not None:
+        mask &= pk > (posi - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)            # reductions over sharded S
+    if quant:   # fold the v scales into the probabilities
+        wv = (w * v_scale[:, :, None, :]).astype(F32)
+        o = jnp.einsum("bhgs,bhsk->bhgk", wv, cache_v.astype(F32),
+                       preferred_element_type=F32)
+    else:
+        o = jnp.einsum("bhgs,bhsk->bhgk", w.astype(cache_v.dtype),
+                       cache_v, preferred_element_type=F32)
+    o = o.reshape(B, H, hd).astype(x.dtype)
+    o = jnp.einsum("bhk,hkd->bd", o, p["wo"])
+    x = x + o
+    h = rms_norm(x, p["norm2"])
+    if mlp_fn is not None:
+        y = mlp_fn(h)
+    else:
+        y = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return shard(x + y, DP, None), cache_k, cache_v, k_scale, v_scale

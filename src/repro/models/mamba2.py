@@ -1,0 +1,176 @@
+"""Mamba2 mixer (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD form: within-chunk quadratic
+(attention-like) term + cross-chunk linear state recurrence scanned over
+chunks; decode is the O(1) recurrent update.  Heads are sharded over tp;
+the SSM state (B, nh, hp, ns) is tiny compared to a KV cache — the
+reason the paper's tiered-KV technique is *inapplicable* to this family
+(DESIGN.md §Arch-applicability).
+
+Simplifications vs the reference implementation (noted in DESIGN.md):
+ngroups=1, no (B, C) activation norm, depthwise conv applied to the
+concatenated [x, B, C] stream as in the paper's fused kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import DP, FSDP, TP, shard
+from .common import F32, rms_norm
+
+
+def init_mamba2(key, cfg, n_copies: int | None):
+    d = cfg.d_model
+    nh, hp, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = nh * hp
+    conv_dim = di + 2 * ns
+    ks = jax.random.split(key, 8)
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(k, *shape, fan_in):
+        full = shape if n_copies is None else (n_copies, *shape)
+        return (jax.random.normal(k, full, F32) * fan_in ** -0.5).astype(dt)
+
+    def full(val, *shape, dtype=F32):
+        s = shape if n_copies is None else (n_copies, *shape)
+        return jnp.full(s, val, dtype)
+
+    return {
+        "norm": full(0.0, d, dtype=dt),
+        "wx": mk(ks[0], d, di, fan_in=d),
+        "wz": mk(ks[1], d, di, fan_in=d),
+        "wB": mk(ks[2], d, ns, fan_in=d),
+        "wC": mk(ks[3], d, ns, fan_in=d),
+        "wdt": mk(ks[4], d, nh, fan_in=d),
+        "conv_w": mk(ks[5], conv_dim, cfg.ssm_conv, fan_in=cfg.ssm_conv),
+        "A_log": full(0.0, nh),          # A = -exp(A_log) = -1
+        "D": full(1.0, nh),
+        "dt_bias": full(0.0, nh),
+        "gated_norm": full(0.0, di, dtype=dt),
+        "wout": mk(ks[6], di, d, fan_in=di),
+    }
+
+
+def mamba2_specs(stacked: bool):
+    r = ("stack",) if stacked else ()
+    return {
+        "norm": (*r, None), "wx": (*r, FSDP, TP), "wz": (*r, FSDP, TP),
+        "wB": (*r, FSDP, None), "wC": (*r, FSDP, None),
+        "wdt": (*r, FSDP, TP), "conv_w": (*r, TP, None),
+        "A_log": (*r, TP), "D": (*r, TP), "dt_bias": (*r, TP),
+        "gated_norm": (*r, TP), "wout": (*r, TP, FSDP),
+    }
+
+
+def _proj(p, h, cfg):
+    nh, hp, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    x = jnp.einsum("...d,de->...e", h, p["wx"])
+    z = jnp.einsum("...d,de->...e", h, p["wz"])
+    Bm = jnp.einsum("...d,dn->...n", h, p["wB"])
+    Cm = jnp.einsum("...d,dn->...n", h, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("...d,dh->...h", h, p["wdt"]).astype(F32)
+        + p["dt_bias"].astype(F32))
+    return x, z, Bm, Cm, dt
+
+
+def _causal_conv(stream, w):
+    """Depthwise causal conv.  stream: (B, L, C); w: (C, K)."""
+    B, L, C = stream.shape
+    K = w.shape[-1]
+    pad = jnp.pad(stream, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad.astype(F32), w.T[:, None, :].astype(F32),  # (K,1,C)->spec below
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    return jax.nn.silu(out).astype(stream.dtype)
+
+
+def mamba2_mixer(p, xin, cfg):
+    """Training/prefill forward.  xin: (B, L, d) -> (B, L, d), and the
+    final SSM/conv state for cache hand-off."""
+    B, L, d = xin.shape
+    nh, hp, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    h = rms_norm(xin, p["norm"])
+    x, z, Bm, Cm, dt = _proj(p, h, cfg)
+    stream = jnp.concatenate([x, Bm, Cm], axis=-1)
+    stream = _causal_conv(stream, p["conv_w"])
+    di = nh * hp
+    x, Bm, Cm = stream[..., :di], stream[..., di:di + ns], \
+        stream[..., di + ns:]
+    x = shard(x.reshape(B, L, nh, hp), DP, None, TP, None)
+    A = -jnp.exp(p["A_log"].astype(F32))                   # (nh,)
+
+    # chunked SSD: scan over chunks, quadratic only within a chunk
+    nC = L // Q
+    xc = jnp.moveaxis(x.reshape(B, nC, Q, nh, hp), 1, 0)          # (nC,B,Q,nh,hp)
+    Bc = jnp.moveaxis(Bm.reshape(B, nC, Q, ns).astype(F32), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B, nC, Q, ns).astype(F32), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B, nC, Q, nh), 1, 0)            # f32
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def chunk_step(hstate, inp):
+        xq, Bq, Cq, dtq = inp           # (B,Q,nh,hp),(B,Q,ns),(B,Q,ns),(B,Q,nh)
+        dA = dtq * A                                              # (B,Q,nh)
+        La = jnp.cumsum(dA, axis=1)
+        # intra-chunk quadratic term
+        seg = La[:, :, None, :] - La[:, None, :, :]               # (B,Q,Q,nh)
+        seg = shard(seg, DP, None, None, TP)
+        M = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        CB = jnp.einsum("bqn,bsn->bqs", Cq, Bq)
+        W = CB[..., None] * M * dtq[:, None, :, :]                # (B,Q,S,nh)
+        y_intra = jnp.einsum("bqsh,bshp->bqhp", W, xq.astype(F32))
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("bqn,bqh,bhnp->bqhp", Cq, jnp.exp(La), hstate)
+        # state update for the next chunk
+        dBx_w = jnp.exp(La[:, -1, None, :] - La) * dtq            # (B,Q,nh)
+        new_state = (hstate * jnp.exp(La[:, -1, :])[:, :, None, None]
+                     + jnp.einsum("bqn,bqh,bqhp->bhnp", Bq, dBx_w,
+                                  xq.astype(F32)))
+        return new_state, y_intra + y_inter
+
+    h0 = jnp.zeros((B, nh, ns, hp), F32)
+    h_last, yc = jax.lax.scan(chunk_step, h0, (xc, Bc, Cc, dtc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, L, nh, hp)
+    y = y + p["D"].astype(F32)[None, None, :, None] * x.astype(F32)
+    y = y.reshape(B, L, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(xin.dtype)    # gate
+    y = rms_norm(y, p["gated_norm"])
+    out = jnp.einsum("bld,de->ble", y, p["wout"])
+    conv_tail = jnp.concatenate([x.reshape(B, L, di), Bm, Cm], axis=-1)[
+        :, -(cfg.ssm_conv - 1):, :]
+    return xin + out, (h_last, conv_tail.astype(xin.dtype))
+
+
+def mamba2_step(p, xin, state, cfg):
+    """Decode step.  xin: (B, d); state = (ssm (B,nh,ns,hp) f32,
+    conv (B, K-1, conv_dim))."""
+    ssm, conv = state
+    B, d = xin.shape
+    nh, hp, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di = nh * hp
+    h = rms_norm(xin, p["norm"])
+    x, z, Bm, Cm, dt = _proj(p, h, cfg)
+    new_col = jnp.concatenate([x, Bm, Cm], axis=-1)         # (B, conv_dim)
+    win = jnp.concatenate([conv, new_col[:, None]], axis=1)  # (B,K,conv)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,ck->bc", win.astype(F32),
+                   p["conv_w"].astype(F32)))
+    x = conv_out[:, :di].reshape(B, nh, hp)
+    Bv = conv_out[:, di:di + ns]
+    Cv = conv_out[:, di + ns:]
+    A = -jnp.exp(p["A_log"].astype(F32))
+    dec = jnp.exp(dt * A)                                   # (B, nh)
+    ssm_new = (ssm * dec[:, :, None, None]
+               + jnp.einsum("bn,bh,bhp->bhnp", Bv, dt, x))
+    y = jnp.einsum("bn,bhnp->bhp", Cv, ssm_new)
+    y = y + p["D"].astype(F32)[None, :, None] * x
+    y = y.reshape(B, di).astype(xin.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(xin.dtype)
+    y = rms_norm(y, p["gated_norm"])
+    out = jnp.einsum("bd,de->be", y, p["wout"])
+    return xin + out, (ssm_new, win[:, 1:].astype(conv.dtype))

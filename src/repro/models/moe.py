@@ -1,0 +1,160 @@
+"""Mixture-of-Experts MLP with token-choice top-k routing and fixed
+expert capacity (GShard/Switch-style), experts sharded over tp (EP).
+
+Dispatch uses an argsort-based slotting (O(Tk log Tk), no (T, E)
+one-hot): tokens are ranked within their expert group and scattered into
+an (E, C, d) buffer sharded over experts — the token->expert resharding
+lowers to the all-to-all-style collectives EP needs.  Overflow beyond
+capacity C = ceil(T * k / E * capacity_factor) is dropped (standard).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import DP, FSDP, TP, shard
+from .common import F32
+
+
+def init_moe(key, cfg, n_copies: int | None):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+
+    def mk(k, *shape, fan_in):
+        full = shape if n_copies is None else (n_copies, *shape)
+        return (jax.random.normal(k, full, F32) * fan_in ** -0.5).astype(dt)
+
+    return {
+        "router": mk(ks[0], d, E, fan_in=d),
+        "w_gate": mk(ks[1], E, d, ff, fan_in=d),
+        "w_up": mk(ks[2], E, d, ff, fan_in=d),
+        "w_down": mk(ks[3], E, ff, d, fan_in=ff),
+    }
+
+
+def moe_specs(stacked: bool, ff_sharded: bool = False):
+    r = ("stack",) if stacked else ()
+    # TP appears on both the expert dim and the ff dim: param_specs'
+    # first-divisible-wins rule gives EP when E % |model| == 0 (qwen3,
+    # 128 experts) and falls back to intra-expert ff sharding otherwise
+    # (mixtral, 8 experts on a 16-way model axis).
+    # `ff_sharded` (decode): weight-stationary layout — FSDP rides the
+    # ff dim instead of d_model, so serving never all-gathers expert
+    # weights; the per-token partial sums it trades for are ~KB
+    # (EXPERIMENTS.md §Perf, qwen3 decode iteration).
+    if ff_sharded:
+        # "tp_fsdp" = model then data: qwen3's E takes model so ff gets
+        # data; mixtral's E can't, so its ff spans model+data (256-way)
+        return {
+            "router": (*r, None, None),
+            "w_gate": (*r, TP, None, "tp_fsdp"),
+            "w_up": (*r, TP, None, "tp_fsdp"),
+            "w_down": (*r, TP, "tp_fsdp", None),
+        }
+    return {
+        "router": (*r, FSDP, None),
+        "w_gate": (*r, TP, FSDP, TP),
+        "w_up": (*r, TP, FSDP, TP),
+        "w_down": (*r, TP, TP, FSDP),
+    }
+
+
+def moe_ffn(p, x, cfg, dropless: bool = False):
+    """x: (B, S, d) or (B, d) -> same shape.
+
+    **Group-local dispatch**: tokens are viewed as (G, T/G) where G =
+    |dp| (the data-shard count read from the active logical binding).
+    Ranking/scatter/gather are batched over the G dim, so under pjit
+    every shard slots its own tokens into its own capacity slice — the
+    dispatch lowers to one token->expert all-to-all instead of a
+    replicated global scatter (which cost ~350 GiB/device at
+    qwen3-235b/train_4k scale — EXPERIMENTS.md §Perf).  Capacity is
+    per-group: C = T/G * K/E * cf (standard "dropping by shard").
+
+    `dropless=True` sets C = T/G (an expert can absorb every local
+    token) — used on the decode path where per-step token counts are
+    tiny and capacity dropping would make decode diverge from prefill.
+    """
+    from ..distributed.sharding import MOEG, TP as _TP, axis_size
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    E, K = cfg.n_experts, cfg.top_k
+    G = axis_size(MOEG)
+    if G <= 1 or T % G:
+        G = 1
+    Tg = T // G
+    C = Tg if dropless else max(int(Tg * K / E * cfg.capacity_factor), 1)
+    C = min(C, Tg)
+    # EP is possible only when E divides the tp axes; otherwise expert
+    # compute stays token-partitioned over the full group axes
+    ep_ok = axis_size(_TP) > 1 and E % axis_size(_TP) == 0
+    xg = shard(xf.reshape(G, Tg, d), MOEG, None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"]).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, K)                # (G, Tg, K)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based, gather-only dispatch ----
+    # Slot (g, e, c) *pulls* its token via searchsorted indices over the
+    # per-group expert-sorted assignment list, so the expert buffer is
+    # born (dp x tp)-sharded: no scatter in the forward pass and no
+    # G-sharded-but-E-replicated transient (a scatter formulation cost
+    # ~100-700 GiB/device at qwen3-235b/train_4k — EXPERIMENTS.md §Perf;
+    # overflow beyond capacity C is dropped, as before).
+    e_flat = eidx.reshape(G, Tg * K)
+    order = jnp.argsort(e_flat, axis=1, stable=True)     # (G, Tg*K)
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    starts = jax.vmap(
+        lambda es: jnp.searchsorted(es, jnp.arange(E)))(e_sorted)
+    pos = starts[:, :, None] + jnp.arange(C)[None, None]  # (G, E, C)
+    pos_c = jnp.clip(pos, 0, Tg * K - 1).reshape(G, E * C)
+    valid = (pos.reshape(G, E * C) < Tg * K) & \
+        (jnp.take_along_axis(e_sorted, pos_c, axis=1)
+         == jnp.repeat(jnp.arange(E), C)[None])           # (G, E*C)
+    a_idx = jnp.take_along_axis(order, pos_c, axis=1)     # assignment id
+    tok = a_idx // K                                      # (G, E*C)
+    eb = jnp.take_along_axis(
+        xg, jnp.where(valid, tok, 0)[..., None], axis=1)  # (G, E*C, d)
+    eb = eb * valid[..., None].astype(eb.dtype)
+    # EP: groups ride the FSDP (data) axis so the expert dim keeps the
+    # model axis even when dp covers it (the "ep" recipe); non-EP
+    # (E < |model|): groups keep all token axes
+    if ep_ok:
+        eb = shard(eb.reshape(G, E, C, d), FSDP, TP, None, None)
+    else:
+        eb = shard(eb.reshape(G, E, C, d), MOEG, None, None, None)
+
+    # ---- expert FFN (local per (dp, expert) shard) ----
+    g = jnp.einsum("gecd,edf->gecf", eb, p["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", eb, p["w_up"])
+    h = (jax.nn.silu(g.astype(F32)).astype(x.dtype) * u)
+    yb = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    yb = shard(yb, FSDP, TP, None, None) if ep_ok \
+        else shard(yb, MOEG, None, None, None)
+
+    # ---- combine: per-group scatter-add back to tokens ----
+    gate_a = jnp.take_along_axis(
+        gates.reshape(G, Tg * K), a_idx, axis=1)          # (G, E*C)
+    w = (gate_a * valid).astype(yb.dtype)[..., None]
+    contrib = yb.reshape(G, E * C, d) * w
+    # invalid slots carry zero contribution, so their (in-range) token
+    # index is harmless in the scatter-add
+    y = jax.vmap(lambda t, c: jnp.zeros((Tg, d), c.dtype)
+                 .at[t].add(c))(tok, contrib)
+    y = shard(y, MOEG, None, None)
+    return y.reshape(orig_shape)
+
+
+def aux_load_balance_loss(p, x, cfg):
+    """Switch-style auxiliary loss (fraction * probability per expert)."""
+    xf = x.reshape(-1, x.shape[-1])
+    logits = jnp.einsum("td,de->te", xf, p["router"]).astype(F32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=F32), axis=0)
+    imp = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

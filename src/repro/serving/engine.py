@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill + decode over the decode cache.
+
+A deliberately simple continuous-batching core: fixed decode batch B,
+requests occupy slots; prefill runs per-request (teacher-forced decode
+into the slot's cache rows — exact, reuses the decode step so the
+engine needs only one compiled function per batch size); decode steps
+advance every live slot one token.  The tiered-KV/embedding paths from
+`repro.tiering` hook in at the cache-fetch boundary and are exercised
+by `benchmarks/tiered_serving.py` at the page level.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.transformer import decode_step, init_cache, init_params
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg, params=None, *, batch: int = 8,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.params = params if params is not None else init_params(
+            jax.random.key(seed), cfg)
+        self.cache = init_cache(cfg, batch, max_len)
+        self._step = jax.jit(
+            lambda c, t, p: decode_step(self.params, cfg, c, t, p))
+        self.slots: list = [None] * batch
+        self.pos = 0                    # shared position (lockstep)
+        self.queue: list = []
+        self.completed: list = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _assign(self):
+        for i in range(self.batch):
+            if self.slots[i] is None and self.queue:
+                self.slots[i] = self.queue.pop(0)
+
+    def run(self, max_steps: int = 10_000):
+        """Lockstep loop: all live slots share the position counter
+        (simplification: prompts are left-aligned per generation wave;
+        a production engine would use per-slot positions)."""
+        while (self.queue or any(self.slots)) and max_steps:
+            self._assign()
+            live = [r for r in self.slots if r is not None]
+            if not live:
+                break
+            wave_prompt = max(len(r.prompt) for r in live)
+            wave_new = max(r.max_new for r in live)
+            self.cache = init_cache(self.cfg, self.batch, self.max_len)
+            toks = np.zeros((self.batch,), np.int32)
+            # teacher-forced prefill (exact; shares the decode step)
+            last_logits = None
+            for t in range(wave_prompt + wave_new):
+                for i, r in enumerate(self.slots):
+                    if r is None:
+                        continue
+                    if t < len(r.prompt):
+                        toks[i] = r.prompt[t]
+                    elif r.out and not r.done:
+                        toks[i] = r.out[-1]
+                logits, self.cache = self._step(
+                    self.cache, jnp.asarray(toks), jnp.int32(t))
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                for i, r in enumerate(self.slots):
+                    if r is None or r.done:
+                        continue
+                    if t >= len(r.prompt) - 1:
+                        r.out.append(int(nxt[i]))
+                        if len(r.out) >= r.max_new:
+                            r.done = True
+                max_steps -= 1
+                if max_steps <= 0:
+                    break
+            for i, r in enumerate(self.slots):
+                if r is not None and r.done:
+                    self.completed.append(r)
+                    self.slots[i] = None
+        return self.completed

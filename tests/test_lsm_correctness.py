@@ -1,0 +1,151 @@
+"""LSM correctness: get() must always return the latest put, for every
+system variant, across flushes, compactions, retention, and promotions.
+
+Read semantics are faithful top-down-first-match, so any shielding bug
+(a stale promoted record placed above a newer version) breaks these
+tests — this is exactly the hazard the paper's §3.3/§3.4 concurrency
+control exists to prevent.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import LSMConfig, make_system
+from repro.core.baselines import SYSTEMS
+
+KIB = 1024
+
+
+def tiny_cfg(**kw):
+    base = dict(fd_size=256 * KIB, sd_size=2 * 1024 * KIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def run_model_check(db, ops, keyspace=500):
+    """Random op stream vs a dict model; verifies every get."""
+    model = {}
+    rng = np.random.default_rng(42)
+    for op, key, vlen in ops:
+        if op == "put":
+            seq = db.put(key, vlen)
+            model[key] = seq
+        elif op == "del":
+            db.delete(key)
+            model[key] = None
+        else:
+            got = db.get(key)
+            want = model.get(key)
+            if want is None:
+                assert got is None, (key, got)
+            else:
+                assert got is not None, (key, "missing")
+                assert got[0] == want, (key, got, want)
+    # final sweep
+    for key, want in model.items():
+        got = db.get(key)
+        if want is None:
+            assert got is None, (key, got)
+        else:
+            assert got is not None and got[0] == want, (key, got, want)
+
+
+def gen_ops(seed, n, keyspace=500):
+    rng = np.random.default_rng(seed)
+    ops = []
+    for _ in range(n):
+        r = rng.random()
+        key = int(rng.integers(0, keyspace))
+        # skew reads so promotions actually trigger
+        if r < 0.5:
+            hot = int(rng.integers(0, max(keyspace // 10, 1)))
+            ops.append(("get", hot if rng.random() < 0.8 else key, 0))
+        elif r < 0.95:
+            ops.append(("put", key, int(rng.integers(50, 400))))
+        else:
+            ops.append(("del", key, 0))
+    return ops
+
+
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_model_equivalence(system):
+    db = make_system(system, tiny_cfg())
+    run_model_check(db, gen_ops(1, 4000))
+
+
+def test_model_equivalence_hotrap_deferred_everything():
+    """Adversarial async: PC inserts deferred, checker deferred — the
+    §3.3 abort and Fig. 5 protocol must keep lookups correct."""
+    db = make_system("hotrap", tiny_cfg(checker_delay_ops=64))
+    db.defer_pc_inserts = 32
+    run_model_check(db, gen_ops(2, 6000))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=12, deadline=None)
+def test_model_equivalence_hotrap_property(seed):
+    db = make_system("hotrap", tiny_cfg(checker_delay_ops=8))
+    db.defer_pc_inserts = 8
+    run_model_check(db, gen_ops(seed, 2500))
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=8, deadline=None)
+def test_model_equivalence_nohotcheck_property(seed):
+    """The Table-4 ablation promotes *everything* read from SD — maximum
+    pressure on the promotion correctness machinery."""
+    db = make_system("hotrap_nohotcheck", tiny_cfg(checker_delay_ops=8))
+    run_model_check(db, gen_ops(seed + 5, 2500))
+
+
+def test_tombstones_reclaimed_at_bottom():
+    db = make_system("rocksdb_tiered", tiny_cfg())
+    for k in range(2000):
+        db.put(k, 200)
+    for k in range(0, 2000, 2):
+        db.delete(k)
+    db.flush_all()
+    for k in range(0, 200, 2):
+        assert db.get(k) is None
+    for k in range(1, 201, 2):
+        assert db.get(k) is not None
+
+
+def test_levels_respect_capacity_approximately():
+    db = make_system("rocksdb_tiered", tiny_cfg())
+    for k in range(4000):
+        db.put(int(k), 300)
+    db.flush_all()
+    for li in range(1, len(db.levels) - 1):
+        cap = db.caps[li]
+        assert db.level_bytes(li) <= cap + db.cfg.target_sstable_bytes * 2
+
+
+def test_sorted_runs_nonoverlapping():
+    db = make_system("hotrap", tiny_cfg())
+    rng = np.random.default_rng(0)
+    for _ in range(3000):
+        db.put(int(rng.integers(0, 1500)), 200)
+        if rng.random() < 0.3:
+            db.get(int(rng.integers(0, 150)))
+    db.flush_all()
+    for li in range(1, len(db.levels)):
+        lvl = db.levels[li]
+        for a, b in zip(lvl, lvl[1:]):
+            assert a.max_key < b.min_key, f"L{li} overlap"
+        for s in lvl:
+            assert (np.diff(s.keys.astype(np.int64)) > 0).all()
+
+
+def test_fd_tier_assignment():
+    db = make_system("hotrap", tiny_cfg())
+    for k in range(3000):
+        db.put(k, 300)
+    db.flush_all()
+    for li, lvl in enumerate(db.levels):
+        for s in lvl:
+            want = "FD" if li < db.cfg.n_fd_levels else "SD"
+            assert s.tier == want

@@ -1,0 +1,146 @@
+"""Deterministic scenarios for the paper's concurrency control.
+
+§3.3 — abort PC insertion when a recorded SD SSTable has been compacted.
+§3.4 / Fig. 5 — the Checker must not flush a stale record above a newer
+version: (a) newer version already in the snapshot => step-8 search
+excludes it; (b) newer version arrives after the snapshot => the
+`updated` field (protocol a-c) excludes it.
+"""
+import numpy as np
+
+from repro.core import LSMConfig, make_system
+
+KIB = 1024
+
+
+def cfg(**kw):
+    base = dict(fd_size=256 * KIB, sd_size=2 * 1024 * KIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=10_000)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def fill_db(db, n=3000, vlen=300, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = np.arange(n)
+    rng.shuffle(keys)
+    seqs = {}
+    for k in keys:
+        seqs[int(k)] = db.put(int(k), vlen)
+    db.flush_all()
+    return seqs
+
+
+def read_from_sd(db, seqs, how_many=1):
+    """Find keys currently served from SD and read them (-> mPC)."""
+    got = []
+    for k in sorted(seqs):
+        before = db.stats.served_sd
+        r = db.get(k)
+        if r is not None and db.stats.served_sd == before + 1:
+            got.append(k)
+            if len(got) >= how_many:
+                break
+    return got
+
+
+def test_updated_field_excludes_stale_records():
+    db = make_system("hotrap", cfg())
+    seqs = fill_db(db)
+    # heat up some SD keys -> RALT marks them hot; reads land in mPC
+    hot = read_from_sd(db, seqs, how_many=30)
+    for _ in range(20):
+        for k in hot:
+            db.get(k)
+    db.ralt._flush_buffer_noio()    # make the accesses visible to is_hot
+    # force mPC -> immPC with the checker DEFERRED
+    db._freeze_mpc()
+    assert db.immpcs, "immPC should exist"
+    immpc = db.immpcs[-1]
+    victim = next(k for k, _, _ in immpc.records)
+    # newer version arrives AFTER the snapshot, then the memtable rotates
+    new_seq = db.put(victim, 333)
+    db._rotate_memtable()           # Fig.5 (a)-(c): registers `updated`
+    assert victim in immpc.updated
+    db._flush_imm_memtables()
+    db._maybe_compact()
+    # now run the checker: the stale record must be excluded
+    db._run_checker(immpc)
+    assert db.stats.checker_excluded_updated >= 1
+    got = db.get(victim)
+    assert got is not None and got[0] == new_seq
+
+
+def test_snapshot_search_excludes_stale_records():
+    db = make_system("hotrap", cfg())
+    seqs = fill_db(db)
+    hot = read_from_sd(db, seqs, how_many=30)
+    for _ in range(20):
+        for k in hot:
+            db.get(k)
+    victim = hot[0]
+    # newer version reaches L0 BEFORE the immPC snapshot
+    new_seq = db.put(victim, 444)
+    db._rotate_memtable()
+    db._flush_imm_memtables()
+    db._freeze_mpc()
+    immpc = db.immpcs[-1]
+    if not any(k == victim for k, _, _ in immpc.records):
+        # victim may have been extracted by a compaction already — then
+        # there is nothing to shield; re-read from SD to stage it again.
+        db.get(victim)
+    db._run_checker(immpc)
+    got = db.get(victim)
+    assert got is not None and got[0] == new_seq
+
+
+def test_sd_compaction_aborts_deferred_pc_insert():
+    db = make_system("hotrap", cfg())
+    seqs = fill_db(db)
+    db.defer_pc_inserts = 10**9       # hold every insert
+    hot = read_from_sd(db, seqs, how_many=5)
+    assert db._deferred_pc, "reads should have queued PC inserts"
+    # compact every touched SD SSTable
+    touched = {sid for *_, t in db._deferred_pc for sid in t}
+    for sid in touched:
+        db._sid_compacted[sid] = True
+    # release the queue
+    for _, key, seq, vlen, t in list(db._deferred_pc):
+        db._do_insert_pc(key, seq, vlen, t)
+    db._deferred_pc = []
+    assert db.stats.pc_insert_aborts >= len(hot)
+    for k in hot:
+        assert k not in db.mpc.data
+
+
+def test_checker_small_batches_reinserted_to_mpc():
+    db = make_system("hotrap", cfg())
+    seqs = fill_db(db)
+    ks = read_from_sd(db, seqs, how_many=3)
+    for _ in range(10):
+        for k in ks:
+            db.get(k)
+    db._freeze_mpc()
+    immpc = db.immpcs[-1]
+    n_before = len(db.mpc.data)
+    db._run_checker(immpc)
+    # tiny hot batch (< half target SSTable) goes back to the mPC
+    assert len(db.mpc.data) >= n_before
+    assert not db.immpcs
+
+
+def test_promotion_actually_moves_serving_to_fd():
+    db = make_system("hotrap", cfg(checker_delay_ops=16))
+    seqs = fill_db(db)
+    hot = read_from_sd(db, seqs, how_many=40)
+    for rep in range(40):
+        for k in hot:
+            db.get(k)
+    db.flush_all()
+    served_fd_before = db.stats.served_fd + db.stats.served_pc
+    for k in hot:
+        db.get(k)
+    served_fd_after = db.stats.served_fd + db.stats.served_pc
+    frac = (served_fd_after - served_fd_before) / len(hot)
+    assert frac > 0.6, f"only {frac:.0%} of hot reads served from FD/PC"

@@ -1,0 +1,63 @@
+"""Property tests for the exponential-smoothing score algebra (§3.2)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import scoring
+
+
+def brute_force(access_ticks, now, alpha=scoring.ALPHA):
+    return sum(alpha ** (now - t) for t in access_ticks)
+
+
+@given(st.lists(st.integers(0, 200), min_size=1, max_size=30),
+       st.integers(200, 300))
+@settings(max_examples=200, deadline=None)
+def test_lazy_representation_matches_definition(ticks, now):
+    """Folding accesses one at a time equals the sum-of-powers definition."""
+    ticks = sorted(ticks)
+    tick, score = ticks[0], 1.0
+    for t in ticks[1:]:
+        tick, score = scoring.on_access(tick, score, t)
+    got = scoring.value_at(tick, score, now)
+    want = brute_force(ticks, now)
+    assert math.isclose(got, want, rel_tol=1e-9)
+
+
+@given(st.lists(st.tuples(st.integers(0, 100), st.floats(0.01, 10.0)),
+                min_size=2, max_size=8),
+       st.integers(100, 150))
+@settings(max_examples=200, deadline=None)
+def test_merge_is_order_independent(records, now):
+    """RALT may merge records in any compaction order — the result must
+    not depend on the order (associativity/commutativity)."""
+    def fold(order):
+        t, s = records[order[0]]
+        for i in order[1:]:
+            t, s = scoring.merge(t, s, *records[i])
+        return scoring.value_at(t, s, now)
+
+    fwd = fold(list(range(len(records))))
+    rev = fold(list(reversed(range(len(records)))))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(len(records)).tolist()
+    assert math.isclose(fwd, rev, rel_tol=1e-9)
+    assert math.isclose(fwd, fold(perm), rel_tol=1e-9)
+
+
+def test_merge_matches_paper_formula():
+    # score* = alpha^(tick_j - tick_i) * score_i + score_j, tick* = tick_j
+    t, s = scoring.merge(3, 2.0, 7, 1.5)
+    assert t == 7
+    assert math.isclose(s, scoring.ALPHA ** 4 * 2.0 + 1.5)
+
+
+@given(st.integers(0, 50), st.floats(0.1, 5.0), st.integers(50, 100))
+@settings(max_examples=100, deadline=None)
+def test_decay_monotonic(tick, score, now):
+    assert scoring.value_at(tick, score, now) <= score + 1e-12
+    assert scoring.value_at(tick, score, now) \
+        >= scoring.value_at(tick, score, now + 10)

@@ -1,0 +1,72 @@
+"""Serving engine + multi-device execution (subprocess: 8 host devices)."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.serving.engine import Request, ServeEngine
+
+
+def test_engine_completes_requests():
+    cfg = smoke_config("internvl2-1b")
+    eng = ServeEngine(cfg, batch=2, max_len=48)
+    rng = np.random.default_rng(0)
+    for rid in range(4):
+        eng.submit(Request(rid=rid,
+                           prompt=list(rng.integers(0, cfg.vocab, 8)),
+                           max_new=6))
+    done = eng.run()
+    assert len(done) == 4
+    assert all(len(r.out) == 6 for r in done)
+    assert all(0 <= t < cfg.vocab + 256 for r in done for t in r.out)
+
+
+def test_engine_greedy_is_deterministic():
+    cfg = smoke_config("stablelm-3b")
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(cfg, batch=1, max_len=32, seed=3)
+        eng.submit(Request(rid=0, prompt=[5, 9, 2, 7], max_new=8))
+        outs.append(tuple(eng.run()[0].out))
+    assert outs[0] == outs[1]
+
+
+_MULTIDEV_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import jax.numpy as jnp
+from repro.configs import smoke_config
+from repro.launch.train import train
+from repro.launch.steps import TrainOptions
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+for recipe in ("tp", "fsdp"):
+    cfg = smoke_config("llama3-8b")
+    _, _, h = train(cfg, steps=3, global_batch=8, seq_len=64, mesh=mesh,
+                    recipe=recipe, log_every=100)
+    assert all(l == l for l in h["loss"]), (recipe, h["loss"])  # no NaN
+    print(recipe, "ok", h["loss"][-1])
+# MoE arch through the tp recipe (EP path) with real execution
+cfg = smoke_config("qwen3-moe-235b-a22b")
+_, _, h = train(cfg, steps=2, global_batch=8, seq_len=32, mesh=mesh,
+                recipe="tp", log_every=100)
+assert all(l == l for l in h["loss"])
+print("moe ok", h["loss"][-1])
+"""
+
+
+@pytest.mark.slow
+def test_multidevice_execution_subprocess():
+    """Real SPMD execution (not just lowering) on 8 host devices, both
+    recipes + the MoE dispatch path."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    out = subprocess.run([sys.executable, "-c", _MULTIDEV_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "moe ok" in out.stdout

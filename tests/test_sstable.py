@@ -1,0 +1,77 @@
+"""Unit + property tests for SSTables, bloom filters, and merges."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.sstable import (BloomFilter, SSTable, TOMBSTONE_VLEN,
+                                merge_runs, split_into_sstables)
+
+
+def _mk(keys, seqs=None, vlens=None, tier="FD", level=1):
+    keys = np.array(sorted(set(keys)), dtype=np.uint64)
+    n = len(keys)
+    seqs = np.arange(1, n + 1) if seqs is None else np.asarray(seqs)
+    vlens = np.full(n, 100, dtype=np.uint32) if vlens is None \
+        else np.asarray(vlens, dtype=np.uint32)
+    return SSTable(keys, seqs, vlens, tier, level, created_at=0)
+
+
+@given(st.sets(st.integers(0, 10**9), min_size=1, max_size=500))
+@settings(max_examples=50, deadline=None)
+def test_bloom_no_false_negatives(keys):
+    ks = np.array(sorted(keys), dtype=np.uint64)
+    bf = BloomFilter(ks, bits_per_key=10)
+    assert all(bf.may_contain(int(k)) for k in ks)
+    assert bf.may_contain_many(ks).all()
+
+
+def test_bloom_false_positive_rate_reasonable():
+    rng = np.random.default_rng(0)
+    present = rng.choice(2 ** 40, size=5000, replace=False).astype(np.uint64)
+    bf = BloomFilter(present, bits_per_key=10)
+    absent = (present + np.uint64(2 ** 41)).astype(np.uint64)
+    fp = bf.may_contain_many(absent).mean()
+    assert fp < 0.05, fp  # 10 bits/key -> ~1% expected
+
+
+@given(st.sets(st.integers(0, 10**6), min_size=1, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_sstable_find(keys):
+    s = _mk(keys)
+    for i, k in enumerate(sorted(keys)):
+        found = s.find(int(k))
+        assert found is not None and found[0] == i + 1
+    assert s.find(10**6 + 7) is None
+
+
+def test_merge_runs_newest_wins():
+    a = (np.array([1, 3, 5], dtype=np.uint64),
+         np.array([10, 11, 12]), np.array([100, 100, 100], np.uint32))
+    b = (np.array([3, 5, 7], dtype=np.uint64),
+         np.array([20, 5, 21]), np.array([200, 200, 200], np.uint32))
+    keys, seqs, vlens = merge_runs([a, b])
+    assert keys.tolist() == [1, 3, 5, 7]
+    assert seqs.tolist() == [10, 20, 12, 21]     # 3: b newer; 5: a newer
+    assert vlens.tolist() == [100, 200, 100, 200]
+
+
+def test_merge_drops_tombstones_at_bottom():
+    a = (np.array([1, 2], dtype=np.uint64), np.array([5, 6]),
+         np.array([100, TOMBSTONE_VLEN], np.uint32))
+    keys, _, _ = merge_runs([a], drop_tombstones=True)
+    assert keys.tolist() == [1]
+
+
+@given(st.integers(1, 2000), st.integers(1, 64))
+@settings(max_examples=30, deadline=None)
+def test_split_into_sstables_partitions(n, target_kb):
+    keys = np.arange(n, dtype=np.uint64)
+    seqs = np.arange(n)
+    vlens = np.full(n, 100, dtype=np.uint32)
+    outs = split_into_sstables(keys, seqs, vlens, "SD", 3, 0,
+                               target_kb * 1024)
+    got = np.concatenate([o.keys for o in outs])
+    assert got.tolist() == keys.tolist()
+    # non-overlapping and ordered
+    for a, b in zip(outs, outs[1:]):
+        assert a.max_key < b.min_key

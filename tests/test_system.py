@@ -1,0 +1,102 @@
+"""End-to-end behaviour: the paper's headline claims at test scale.
+
+These are scaled-down versions of the §4 experiments; thresholds are
+loose (the benchmarks reproduce the exact figures) but directional —
+they fail if retention/promotion/tracking regress.
+"""
+import numpy as np
+import pytest
+
+from repro.core.runner import (bench_system, db_key_count, default_config,
+                               load_db, run_workload)
+from repro.data.workloads import KeyDist, ycsb
+
+
+@pytest.fixture(scope="module")
+def hotspot_results():
+    cfg = default_config("tiny")
+    n_keys = db_key_count(cfg, 1000)
+    dist = KeyDist("hotspot", n_keys)
+    out = {}
+    for name in ["rocksdb_fd", "rocksdb_tiered", "hotrap"]:
+        out[name] = bench_system(name, "RO", dist, 40_000, 1000, cfg=cfg)
+    return out
+
+
+def test_hotrap_beats_tiered_on_hotspot(hotspot_results):
+    """Paper Fig. 6: HotRAP >> RocksDB-tiered under hotspot-5% RO."""
+    h = hotspot_results["hotrap"].throughput
+    t = hotspot_results["rocksdb_tiered"].throughput
+    assert h > 3.0 * t, (h, t)
+
+
+def test_hotrap_approaches_fd_upper_bound(hotspot_results):
+    """Paper §4.2: close to RocksDB-FD with ~95% FD hit rate."""
+    h = hotspot_results["hotrap"]
+    fd = hotspot_results["rocksdb_fd"]
+    assert h.fd_hit_rate > 0.85
+    assert h.throughput > 0.5 * fd.throughput
+
+
+def test_hotrap_tail_latency_below_tiered(hotspot_results):
+    """Paper Fig. 8: fewer SD accesses => lower read tail latency."""
+    assert hotspot_results["hotrap"].p99 \
+        <= hotspot_results["rocksdb_tiered"].p99 * 1.05
+
+
+def test_uniform_overhead_small():
+    """Paper §4.2: < ~1% throughput overhead vs tiered under uniform
+    (we allow 10% at this tiny scale)."""
+    cfg = default_config("tiny")
+    n_keys = db_key_count(cfg, 1000)
+    dist = KeyDist("uniform", n_keys)
+    tiered = bench_system("rocksdb_tiered", "RO", dist, 20_000, 1000, cfg=cfg)
+    hot = bench_system("hotrap", "RO", dist, 20_000, 1000, cfg=cfg)
+    assert hot.throughput > 0.90 * tiered.throughput
+
+
+def test_retention_ablation_direction():
+    """Paper Table 3: no-retain promotes more bytes, lower hit rate."""
+    cfg = default_config("tiny")
+    n_keys = db_key_count(cfg, 1000)
+    dist = KeyDist("hotspot", n_keys)
+    full = bench_system("hotrap", "RW", dist, 30_000, 1000, cfg=cfg)
+    abl = bench_system("hotrap_noretain", "RW", dist, 30_000, 1000, cfg=cfg)
+    assert abl.fd_hit_rate <= full.fd_hit_rate + 0.05
+    assert full.stats["retained_bytes"] > 0
+    assert abl.stats["retained_bytes"] == 0
+
+
+def test_hotness_check_ablation_direction():
+    """Paper Table 4: promoting everything inflates promoted bytes."""
+    cfg = default_config("tiny")
+    n_keys = db_key_count(cfg, 1000)
+    dist = KeyDist("uniform", n_keys)
+    full = bench_system("hotrap", "RO", dist, 20_000, 1000, cfg=cfg)
+    abl = bench_system("hotrap_nohotcheck", "RO", dist, 20_000, 1000,
+                       cfg=cfg)
+    assert abl.stats["promoted_bytes"] > 5 * max(full.stats["promoted_bytes"], 1)
+
+
+def test_ralt_io_share_small():
+    """Paper §4.4: RALT accounts for a small share of total I/O."""
+    cfg = default_config("tiny")
+    n_keys = db_key_count(cfg, 1000)
+    dist = KeyDist("hotspot", n_keys)
+    r = bench_system("hotrap", "RW", dist, 30_000, 1000, cfg=cfg)
+    comp = r.storage["components"]
+    ralt_io = comp.get("ralt", {"read_bytes": 0, "write_bytes": 0})
+    total_io = sum(c["read_bytes"] + c["write_bytes"]
+                   for c in comp.values())
+    share = (ralt_io["read_bytes"] + ralt_io["write_bytes"]) / total_io
+    assert share < 0.30, share
+
+
+def test_zipfian_improves_over_tiered():
+    cfg = default_config("tiny")
+    n_keys = db_key_count(cfg, 1000)
+    dist = KeyDist("zipfian", n_keys)
+    tiered = bench_system("rocksdb_tiered", "RO", dist, 30_000, 1000,
+                          cfg=cfg)
+    hot = bench_system("hotrap", "RO", dist, 30_000, 1000, cfg=cfg)
+    assert hot.throughput > 1.5 * tiered.throughput
