@@ -1,0 +1,57 @@
+"""YCSB-E range scans across systems (the scan-workload axis).
+
+The paper evaluates point lookups; this section asks its tiered-storage
+question for ranges: *do hot scanned records end up living on FD?*
+Workload: YCSB-E — 95% short range scans / 5% inserts, zipfian scan
+start keys, uniform scan length in [1, 100].  Derived columns report
+simulated throughput and the scan FD hit rate (fraction of scanned
+records served from memtables, FD levels, or the promotion cache) over
+the final 10% of the run.  HotRAP's scan-side hotness pathway
+(core/scan.py) should place it at or above every tiered baseline on
+hit rate.
+"""
+from __future__ import annotations
+
+from repro.core.runner import run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import DB_CACHE, emit, make_cfg, n_ops
+
+ALL_SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap", "mutant",
+               "sas_cache", "prismdb"]
+CORE_SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap"]
+
+
+def run(value_len: int = 1000, tag: str = "ycsb_e",
+        quick: bool = False) -> dict:
+    cfg = make_cfg()
+    systems = CORE_SYSTEMS if quick else ALL_SYSTEMS
+    # scans touch ~50 records each => scale op count down to keep the
+    # record volume comparable to the point-lookup sections
+    ops = max(n_ops() // 10, 2000)
+    results = {}
+    for system in systems:
+        db, nk = DB_CACHE.get(system, cfg, value_len)
+        dist = KeyDist("zipfian", nk)
+        wl = ycsb("SR", dist, ops, value_len, seed=13)
+        res = run_workload(db, wl, name=system)
+        us = 1e6 / max(res.throughput, 1e-9)
+        emit(f"{tag}/zipfian/SR/{system}", us,
+             f"thr={res.throughput:.0f}ops/s;scan_hit={res.scan_fd_hit_rate:.3f}")
+        results[system] = res
+    tiered = {s: r for s, r in results.items()
+              if s not in ("hotrap", "rocksdb_fd")}
+    if "hotrap" in results and tiered:
+        best = max(r.scan_fd_hit_rate for r in tiered.values())
+        emit(f"{tag}/zipfian/SR/hotrap_hit_vs_best_tiered", 0.0,
+             f"hotrap={results['hotrap'].scan_fd_hit_rate:.3f};"
+             f"best_other={best:.3f}")
+    return results
+
+
+def main(quick: bool = False):
+    run(1000, quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,8 @@
 """HotRAP core: the paper's contribution as a reusable library.
 
 Public API:
-    LSMConfig, TieredLSM      — the engine (core/lsm.py)
+    LSMConfig, TieredLSM      — the engine (core/lsm.py); point ops plus
+                                `scan`/`scan_range` (core/scan.py)
     RALT, RaltConfig          — the hotness tracker (core/ralt.py)
     make_system, SYSTEMS      — paper baselines (core/baselines.py)
     StorageSim                — simulated tiered devices (core/storage.py)

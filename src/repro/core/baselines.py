@@ -71,11 +71,29 @@ class Mutant(TieredLSM):
             self.temps[sid] = self.temps.get(sid, 0.0) + 1.0
         return res
 
+    def _count_accesses(self, n: int) -> None:
+        before = self._accesses
+        self._accesses += n
+        crossings = (self._accesses // self.migration_interval
+                     - before // self.migration_interval)
+        for _ in range(crossings):   # one decay+migration per interval
+            self._migrate()
+
     def get(self, key: int):
         out = super().get(key)
-        self._accesses += 1
-        if self._accesses % self.migration_interval == 0:
-            self._migrate()
+        self._count_accesses(1)
+        return out
+
+    def _scan_charge_block(self, sst, blk):
+        # scanned blocks heat their SSTable just like point reads do
+        self.temps[sst.sid] = self.temps.get(sst.sid, 0.0) + 1.0
+        super()._scan_charge_block(sst, blk)
+
+    def _scan(self, lo, hi, limit):
+        out = super()._scan(lo, hi, limit)
+        # a scan is one record-access per returned record, not one op —
+        # otherwise scan-heavy mixes never reach the migration interval
+        self._count_accesses(max(1, len(out)))
         return out
 
     def _migrate(self) -> None:
@@ -126,6 +144,22 @@ class SASCache(TieredLSM):
         self.secondary = BlockCache(int(secondary_frac * cfg.fd_size),
                                     BLOCK_BYTES)
 
+    def _block_read_via_secondary(self, sst, blk, *, rand: bool, fg: bool,
+                                  component: str) -> None:
+        """Shared block-read ladder: secondary-cache hit turns an SD
+        block read into an FD one; a miss reads SD and admits the block
+        to the FD secondary cache (one FD write)."""
+        read = self.storage.rand_read if rand else self.storage.seq_read
+        if sst.tier == "SD":
+            if self.secondary.access((sst.sid, blk)):
+                read("FD", BLOCK_BYTES, fg=fg, component=component)
+            else:
+                read("SD", BLOCK_BYTES, fg=fg, component=component)
+                self.storage.seq_write("FD", BLOCK_BYTES, fg=False,
+                                       component="secondary")
+        else:
+            read("FD", BLOCK_BYTES, fg=fg, component=component)
+
     def _search_levels(self, key, level_range, fg, touched=None):
         for li in level_range:
             sstables = self.levels[li]
@@ -151,22 +185,17 @@ class SASCache(TieredLSM):
                 else:
                     blk = 0
                 if not self.block_cache.access((s.sid, blk)):
-                    if s.tier == "SD":
-                        if self.secondary.access((s.sid, blk)):
-                            self.storage.rand_read("FD", BLOCK_BYTES, fg=fg,
+                    self._block_read_via_secondary(s, blk, rand=True, fg=fg,
                                                    component="get")
-                        else:
-                            self.storage.rand_read("SD", BLOCK_BYTES, fg=fg,
-                                                   component="get")
-                            self.storage.seq_write("FD", BLOCK_BYTES,
-                                                   fg=False,
-                                                   component="secondary")
-                    else:
-                        self.storage.rand_read("FD", BLOCK_BYTES, fg=fg,
-                                               component="get")
                 if found:
                     return found[0], found[1], s.sid
         return None
+
+    def _scan_charge_block(self, sst, blk):
+        if self.block_cache.access((sst.sid, blk)):
+            return
+        self._block_read_via_secondary(sst, blk, rand=False, fg=True,
+                                       component="scan")
 
 
 # ----------------------------------------------------------------------
@@ -190,16 +219,31 @@ class PrismDB(TieredLSM):
         self.clock_clear_interval = clock_clear_interval
         self._clock_rng = np.random.default_rng(7)
 
+    def _count_reads(self, n: int) -> None:
+        before = self._reads
+        self._reads += n
+        crossings = (self._reads // self.clock_clear_interval
+                     - before // self.clock_clear_interval)
+        for _ in range(crossings):
+            # clock hand sweep: clear ~half the bits per interval crossed
+            for k in list(self.clock):
+                if self._clock_rng.random() < 0.5:
+                    del self.clock[k]
+
     def get(self, key: int):
         out = super().get(key)
         if out is not None:
             self.clock[key] = True
-        self._reads += 1
-        if self._reads % self.clock_clear_interval == 0:
-            # clock hand sweep: clear ~half the bits
-            for k in list(self.clock):
-                if self._clock_rng.random() < 0.5:
-                    del self.clock[k]
+        self._count_reads(1)
+        return out
+
+    def _scan(self, lo, hi, limit):
+        out = super()._scan(lo, hi, limit)
+        for k, _, _ in out:           # scanned records set clock bits too
+            self.clock[k] = True
+        # record-granular accounting: without it scan-heavy mixes set
+        # bits ~scan_len times faster than the sweep interval assumes
+        self._count_reads(max(1, len(out)))
         return out
 
     def _merge_into_next(self, li, inputs, lo, hi):

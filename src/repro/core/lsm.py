@@ -27,6 +27,7 @@ import numpy as np
 
 from .promotion import ImmutablePromotionCache, MutablePromotionCache
 from .ralt import RALT, RaltConfig
+from .scan import MAX_KEY, build_sources, merge_scan
 from .sstable import (BLOCK_BYTES, KEY_BYTES, TOMBSTONE_VLEN, SSTable,
                       merge_runs, split_into_sstables)
 from .storage import BlockCache, StorageSim
@@ -97,6 +98,15 @@ class Stats:
     checker_runs: int = 0
     checker_excluded_updated: int = 0
     checker_excluded_newer: int = 0
+    # --- range scans ---
+    scans: int = 0
+    scanned_records: int = 0             # live records returned by scans
+    scan_served_mem: int = 0
+    scan_served_fd: int = 0
+    scan_served_pc: int = 0
+    scan_served_sd: int = 0
+    scan_pc_inserts: int = 0             # scan-side PC insert *attempts*
+                                         # (the §3.3 check may still abort)
 
     @property
     def fd_hit_rate(self) -> float:
@@ -104,9 +114,17 @@ class Stats:
         den = max(self.gets, 1)
         return num / den
 
+    @property
+    def scan_fd_hit_rate(self) -> float:
+        """Fraction of scanned records served without touching SD."""
+        num = self.scan_served_mem + self.scan_served_fd + self.scan_served_pc
+        den = max(self.scanned_records, 1)
+        return num / den
+
 
 class TieredLSM:
-    """The key-value store.  `put`/`get`/`delete` are the public API."""
+    """The key-value store.  `put`/`get`/`delete`/`scan`/`scan_range`
+    are the public API."""
 
     def __init__(self, cfg: LSMConfig, storage: StorageSim | None = None,
                  seed: int = 0):
@@ -198,6 +216,102 @@ class TieredLSM:
             return self._finish_get(key, (seq, vlen), tier="SD")
         self.stats.misses += 1
         return None
+
+    def scan(self, lo: int, n: int) -> list[tuple[int, int, int]]:
+        """YCSB-style scan: up to `n` live records with key >= lo.
+
+        Returns [(key, seq, vlen)] in ascending key order, with `get`'s
+        visibility semantics per key (top-down-first-match, tombstones
+        suppress).  Charges per-block sequential scan I/O; see
+        core/scan.py for the merged-iterator machinery.
+        """
+        return self._scan(lo, MAX_KEY, n)
+
+    def scan_range(self, lo: int, hi: int) -> list[tuple[int, int, int]]:
+        """All live records with lo <= key <= hi (same semantics as scan)."""
+        return self._scan(lo, hi, None)
+
+    def _scan(self, lo: int, hi: int, limit: int | None
+              ) -> list[tuple[int, int, int]]:
+        self.stats.scans += 1
+        self._tick()
+        if limit is not None and limit <= 0:
+            return []
+        smap = build_sources(self, lo, hi, self._scan_charge_block)
+        out: list[tuple[int, int, int]] = []
+        sd_hits: list[tuple[int, int, int, int]] = []
+        st = self.stats
+        for key, seq, vlen, pri, sid in merge_scan(smap.sources):
+            if vlen == TOMBSTONE_VLEN:
+                continue
+            out.append((key, seq, vlen))
+            tier = smap.classify(pri)
+            if tier == "mem":
+                st.scan_served_mem += 1
+            elif tier == "FD":
+                st.scan_served_fd += 1
+            elif tier == "PC":
+                st.scan_served_pc += 1
+            else:
+                st.scan_served_sd += 1
+                sd_hits.append((key, seq, vlen, sid))
+            if limit is not None and len(out) >= limit:
+                break
+        st.scanned_records += len(out)
+        if self.cfg.hotrap and self.ralt is not None and out:
+            self._record_scan_hotness(lo, hi, out, sd_hits)
+        return out
+
+    def _record_scan_hotness(self, lo: int, hi: int,
+                             out: list[tuple[int, int, int]],
+                             sd_hits: list[tuple[int, int, int, int]]) -> None:
+        """Scan-side hotness pathway: batch-log every served record in
+        RALT, then route SD-served records that RALT already considers
+        hot into the promotion cache via the same §3.3-checked insert as
+        point lookups (the touched SSTable is the record's source)."""
+        keys = np.fromiter((k for k, _, _ in out), dtype=np.uint64,
+                           count=len(out))
+        vlens = np.fromiter((v for _, _, v in out), dtype=np.uint32,
+                            count=len(out))
+        self.ralt.record_range_access(lo, hi, keys, vlens)
+        if not sd_hits:
+            return
+        skeys = np.fromiter((k for k, _, _, _ in sd_hits), dtype=np.uint64,
+                            count=len(sd_hits))
+        hot = self.ralt.is_hot_many(skeys)
+        for (key, seq, vlen, sid), h in zip(sd_hits, hot):
+            # Table-4 ablation parity: hotness_check=False promotes every
+            # SD-served record, on scans just like on point gets.
+            if h or not self.cfg.hotness_check:
+                self.stats.scan_pc_inserts += 1
+                self._insert_pc(key, seq, vlen,
+                                self._sd_touched_for_key(key, sid))
+
+    def _sd_touched_for_key(self, key: int, winner_sid: int) -> list[int]:
+        """The §3.3 touched-SSTable list for one scanned key: every SD
+        table `get` would have probed top-down before finding the winner.
+        A newer version could sink into any of them, so a compaction of
+        any must abort the (possibly deferred) PC insert — the winner's
+        table alone is not enough."""
+        touched: list[int] = []
+        for li in range(self.cfg.n_fd_levels, len(self.levels)):
+            sstables = self.levels[li]
+            if not sstables:
+                continue
+            idx = self._bisect_level(sstables, key)
+            if idx is None:
+                continue
+            touched.append(sstables[idx].sid)
+            if sstables[idx].sid == winner_sid:
+                break
+        return touched
+
+    def _scan_charge_block(self, sst: SSTable, blk: int) -> None:
+        """Charge one scanned data block (block-cache hits are free).
+        Baselines override this to interpose their caching layers."""
+        if not self.block_cache.access((sst.sid, blk)):
+            self.storage.seq_read(sst.tier, BLOCK_BYTES, fg=True,
+                                  component="scan")
 
     # ------------------------------------------------------------------
     # read path internals

@@ -188,6 +188,9 @@ class RALT:
         self.buf_keys: list[int] = []
         self.buf_vlens: list[int] = []
         self.buf_ticks: list[int] = []
+        # batch inserts (range scans) land as whole numpy chunks
+        self.buf_chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        self._buf_chunk_len = 0
         self.runs: list[RaltRun] = []     # newest first
         self.tick = 0
         self.epoch = 0
@@ -199,25 +202,55 @@ class RALT:
         self.n_evictions = 0
 
     # ------------------------------------------------------------------
-    def record_access(self, key: int, vlen: int) -> None:
-        """Log one access; advances tick/epoch clocks by accessed bytes."""
-        self.buf_keys.append(key)
-        self.buf_vlens.append(vlen)
-        self.buf_ticks.append(self.tick)
-        nbytes = KEY_BYTES + vlen
+    def _advance_clocks(self, nbytes: int) -> None:
         self._accessed_since_tick += nbytes
         if self._accessed_since_tick >= self.cfg.tick_bytes:
             self.tick += self._accessed_since_tick // self.cfg.tick_bytes
             self._accessed_since_tick %= self.cfg.tick_bytes
         self._accessed_since_epoch += nbytes
         if self._accessed_since_epoch >= self.cfg.r_bytes:
-            self.epoch += 1
-            self._accessed_since_epoch -= self.cfg.r_bytes
-        if len(self.buf_keys) * PHYS_RECORD_BYTES >= self.cfg.buffer_bytes:
+            self.epoch += self._accessed_since_epoch // self.cfg.r_bytes
+            self._accessed_since_epoch %= self.cfg.r_bytes
+
+    def _maybe_flush_or_evict(self) -> None:
+        if ((len(self.buf_keys) + self._buf_chunk_len) * PHYS_RECORD_BYTES
+                >= self.cfg.buffer_bytes):
             self._flush_buffer()
         if (self.hot_set_bytes > self.hot_set_limit
                 or self.phys_bytes > self.phys_limit):
             self._evict()
+
+    def record_access(self, key: int, vlen: int) -> None:
+        """Log one access; advances tick/epoch clocks by accessed bytes."""
+        self.buf_keys.append(key)
+        self.buf_vlens.append(vlen)
+        self.buf_ticks.append(self.tick)
+        self._advance_clocks(KEY_BYTES + vlen)
+        self._maybe_flush_or_evict()
+
+    def record_range_access(self, lo: int, hi: int, keys: np.ndarray,
+                            vlens: np.ndarray) -> None:
+        """Vectorized batch analogue of `record_access` for range scans.
+
+        A scan over [lo, hi] served `keys` (with HotRAP value sizes
+        `vlens`); all of them enter the scoring pipeline at the current
+        tick in one numpy chunk — no per-key Python loop — so scans over
+        SD-resident hot ranges feed the same promotion machinery as
+        repeated point lookups.  Clocks advance by the total scanned
+        HotRAP bytes.  `lo`/`hi` fix the interface for range-level
+        (REMIX-style) scoring — today's per-key scoring does not consume
+        them (see ROADMAP open items).
+        """
+        if len(keys) == 0:
+            return
+        keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        vlens = np.ascontiguousarray(vlens, dtype=np.uint32)
+        ticks = np.full(len(keys), self.tick, dtype=np.int64)
+        self.buf_chunks.append((keys, vlens, ticks))
+        self._buf_chunk_len += len(keys)
+        nbytes = int(vlens.astype(np.int64).sum()) + KEY_BYTES * len(keys)
+        self._advance_clocks(nbytes)
+        self._maybe_flush_or_evict()
 
     # ------------------------------------------------------------------
     @property
@@ -227,11 +260,22 @@ class RALT:
     @property
     def phys_bytes(self) -> int:
         return (sum(r.phys_bytes for r in self.runs)
-                + len(self.buf_keys) * PHYS_RECORD_BYTES)
+                + (len(self.buf_keys) + self._buf_chunk_len)
+                * PHYS_RECORD_BYTES)
 
     def is_hot(self, key: int) -> bool:
         """Bloom-filter check across runs (in memory — no I/O, paper §3.2)."""
         return any(r.bloom.may_contain(key) for r in self.runs)
+
+    def is_hot_many(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized `is_hot` over a key array (scan promotion filter)."""
+        out = np.zeros(len(keys), dtype=bool)
+        if len(keys) == 0:
+            return out
+        ks = np.ascontiguousarray(keys, dtype=np.uint64)
+        for r in self.runs:
+            out |= r.bloom.may_contain_many(ks)
+        return out
 
     def range_hot_bytes(self, lo: int, hi: int) -> int:
         """Estimated hot-set HotRAP size in [lo, hi] (overestimates dups)."""
@@ -262,12 +306,30 @@ class RALT:
         return keys[hot], vlens[hot]
 
     # ------------------------------------------------------------------
+    def _drain_buffer_arrays(self):
+        """Concatenate + reset the point-access lists and scan chunks."""
+        parts_k, parts_v, parts_t = [], [], []
+        if self.buf_keys:
+            parts_k.append(np.array(self.buf_keys, dtype=np.uint64))
+            parts_v.append(np.array(self.buf_vlens, dtype=np.uint32))
+            parts_t.append(np.array(self.buf_ticks, dtype=np.int64))
+        for k, v, t in self.buf_chunks:
+            parts_k.append(k)
+            parts_v.append(v)
+            parts_t.append(t)
+        self.buf_keys, self.buf_vlens, self.buf_ticks = [], [], []
+        self.buf_chunks, self._buf_chunk_len = [], 0
+        if not parts_k:
+            return (np.zeros(0, dtype=np.uint64),
+                    np.zeros(0, dtype=np.uint32),
+                    np.zeros(0, dtype=np.int64))
+        return (np.concatenate(parts_k), np.concatenate(parts_v),
+                np.concatenate(parts_t))
+
     def _flush_buffer(self) -> None:
-        if not self.buf_keys:
+        if not self.buf_keys and not self.buf_chunks:
             return
-        keys = np.array(self.buf_keys, dtype=np.uint64)
-        vlens = np.array(self.buf_vlens, dtype=np.uint32)
-        ticks = np.array(self.buf_ticks, dtype=np.int64)
+        keys, vlens, ticks = self._drain_buffer_arrays()
         scores = np.ones(len(keys))
         cnts = np.full(len(keys), self.cfg.delta_c)
         tags = np.zeros(len(keys), dtype=np.int8)
@@ -279,7 +341,6 @@ class RALT:
                       now_tick=self.tick, alpha=self.cfg.alpha)
         self.storage.seq_write("FD", run.phys_bytes, fg=False, component="ralt")
         self.runs.insert(0, run)
-        self.buf_keys, self.buf_vlens, self.buf_ticks = [], [], []
         # Leveling-ish maintenance: bound the run count by merging all
         # runs once too many accumulate (RALT is small; the paper merges
         # step-by-step to bound temp space — same I/O, simpler shape).
@@ -298,13 +359,11 @@ class RALT:
         return _merge_records(parts, self.cfg.alpha, self.epoch, self.cfg.c_max)
 
     def _flush_pending_buffer_arrays(self) -> None:
-        if self.buf_keys:
+        if self.buf_keys or self.buf_chunks:
             self._flush_buffer_noio()
 
     def _flush_buffer_noio(self) -> None:
-        keys = np.array(self.buf_keys, dtype=np.uint64)
-        vlens = np.array(self.buf_vlens, dtype=np.uint32)
-        ticks = np.array(self.buf_ticks, dtype=np.int64)
+        keys, vlens, ticks = self._drain_buffer_arrays()
         merged = _merge_records(
             [(keys, vlens, ticks, np.ones(len(keys)),
               np.full(len(keys), self.cfg.delta_c),
@@ -313,7 +372,6 @@ class RALT:
             self.cfg.alpha, self.epoch, self.cfg.c_max)
         self.runs.insert(0, RaltRun(*merged, hot_threshold=self.hot_threshold,
                                     now_tick=self.tick, alpha=self.cfg.alpha))
-        self.buf_keys, self.buf_vlens, self.buf_ticks = [], [], []
 
     def _merge_all_runs(self) -> None:
         total_phys = sum(r.phys_bytes for r in self.runs)

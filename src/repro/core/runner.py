@@ -11,7 +11,8 @@ import dataclasses
 
 import numpy as np
 
-from ..data.workloads import OP_INSERT, OP_READ, OP_UPDATE, Workload, load_keys
+from ..data.workloads import (OP_INSERT, OP_READ, OP_SCAN, OP_UPDATE,
+                              Workload, load_keys)
 from .baselines import make_system
 from .lsm import LSMConfig, TieredLSM
 from .storage import MIB
@@ -25,9 +26,10 @@ class RunResult:
     tail_window_seconds: float  # final 10% of ops
     throughput: float           # ops/s over final 10% (paper metric)
     fd_hit_rate: float
-    get_latencies: np.ndarray   # per-get simulated seconds
+    get_latencies: np.ndarray   # per-get/per-scan simulated seconds
     stats: dict
     storage: dict
+    scan_fd_hit_rate: float = 0.0   # scanned records served off FD, final 10%
 
     @property
     def p99(self) -> float:
@@ -83,23 +85,28 @@ def run_workload(db: TieredLSM, wl: Workload, name: str = "?",
     sd_lat = np.zeros(n if collect_latency else 0)
     t10_start_ops = int(n * 0.9)
     busy90 = {t: 0.0 for t in ("FD", "SD")}
-    gets90 = hits90 = 0
+    gets90 = hits90 = scanned90 = scan_hits90 = 0
     for j in range(n):
         if j == t10_start_ops:
             busy90 = {t: db.storage.dev[t].busy for t in ("FD", "SD")}
             gets90 = db.stats.gets
             hits90 = (db.stats.served_mem + db.stats.served_fd
                       + db.stats.served_pc)
+            scanned90 = db.stats.scanned_records
+            scan_hits90 = (db.stats.scan_served_mem + db.stats.scan_served_fd
+                           + db.stats.scan_served_pc)
         op, key = int(wl.ops[j]), int(wl.keys[j])
-        if op == OP_READ:
+        if op == OP_READ or op == OP_SCAN:
             if collect_latency:
                 f0 = db.storage.dev["FD"].fg_time
                 s0 = db.storage.dev["SD"].fg_time
+            if op == OP_READ:
                 db.get(key)
+            else:
+                db.scan(key, int(wl.scan_lens[j]))
+            if collect_latency:
                 fd_lat[j] = db.storage.dev["FD"].fg_time - f0
                 sd_lat[j] = db.storage.dev["SD"].fg_time - s0
-            else:
-                db.get(key)
         elif op == OP_INSERT:
             db.put(key, fresh_value)
         else:
@@ -118,23 +125,29 @@ def run_workload(db: TieredLSM, wl: Workload, name: str = "?",
         for t, arr in (("FD", fd_lat), ("SD", sd_lat)):
             rho = min((db.storage.dev[t].busy - busy90[t]) / window, 0.95)
             lat += arr[t10_start_ops:] / (1.0 - rho)
-        window_reads = wl.ops[t10_start_ops:] == OP_READ
+        window_reads = ((wl.ops[t10_start_ops:] == OP_READ)
+                        | (wl.ops[t10_start_ops:] == OP_SCAN))
     else:
         lat = fd_lat
         window_reads = np.zeros(0, dtype=bool)
-    reads = wl.ops == OP_READ
     # paper metric: FD hit rate over the *final 10%* of the run phase
     gets_w = db.stats.gets - gets90
     hits_w = (db.stats.served_mem + db.stats.served_fd
               + db.stats.served_pc) - hits90
     hit_final = hits_w / gets_w if gets_w else db.stats.fd_hit_rate
+    scanned_w = db.stats.scanned_records - scanned90
+    scan_hits_w = (db.stats.scan_served_mem + db.stats.scan_served_fd
+                   + db.stats.scan_served_pc) - scan_hits90
+    scan_hit_final = (scan_hits_w / scanned_w if scanned_w
+                      else db.stats.scan_fd_hit_rate)
     return RunResult(
         system=name, n_ops=n, sim_seconds=total,
         tail_window_seconds=window, throughput=thr,
         fd_hit_rate=hit_final,
         get_latencies=lat[window_reads] if collect_latency else lat,
         stats=dataclasses.asdict(db.stats),
-        storage=db.storage.snapshot())
+        storage=db.storage.snapshot(),
+        scan_fd_hit_rate=scan_hit_final)
 
 
 def bench_system(system: str, mix: str, dist, n_ops: int, value_len: int,

@@ -1,0 +1,175 @@
+"""Range scans over the tiered LSM: heap-based k-way merged iteration.
+
+Scan semantics vs. `get`
+------------------------
+`TieredLSM.get` resolves one key by probing sources *top-down* and
+returning the first match (memtable, immutable memtables, FD levels,
+mutable promotion cache, SD levels).  A range scan must produce the same
+visible version for *every* key in the range, so the merged iterator
+reproduces that rule positionally: each source is an ascending-key
+cursor tagged with its probe priority, all cursors feed one min-heap
+ordered by (key, priority), and for each distinct key only the first
+popped entry — the one from the highest-priority (newest) source — wins.
+Losing duplicates are drained silently.  A winning tombstone suppresses
+the key entirely (it shadows any older live version below), mirroring
+`get`'s `None` for deleted keys.
+
+I/O accounting
+--------------
+Memtables and the mutable promotion cache are in memory — scanning them
+is free.  Each SSTable cursor walks `SSTable.block_iter(lo, hi)` and
+charges its tier ONE sequential block read per data block it actually
+enters (the scan-cursor analogue of `get`'s one random read per probed
+block).  Blocks resident in the shared `BlockCache` are free, and blocks
+read by the scan are admitted to it, so repeated scans of a small hot
+range become cheap — exactly the behaviour the FD-hit-rate metric
+measures.  Charging is delegated to the engine via a callback so
+baselines can interpose (e.g. SAS-Cache consults its FD secondary block
+cache for SD blocks).
+
+Scan-side hotness (HotRAP extension)
+------------------------------------
+`get` feeds every served record to RALT one at a time; scans touch
+thousands of records per op, so `TieredLSM._scan` batches the whole
+result set into `RALT.record_range_access` (vectorized) and routes
+SD-served hot records into the promotion cache through the same §3.3
+checked insert as point lookups — scans over SD-resident hot ranges
+therefore trigger promotion just like repeated point reads do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+
+from .sstable import SSTable
+
+MAX_KEY = 2 ** 64 - 1
+
+# tier classification of a source priority (see SourceMap.classify)
+TIER_MEM, TIER_FD, TIER_PC, TIER_SD = "mem", "FD", "PC", "SD"
+
+
+def _mem_source(table: dict, lo: int, hi: int):
+    """Ascending-key cursor over an in-memory dict source (memtable or
+    mutable promotion cache).  Free of device I/O.  Yields
+    (key, seq, vlen, sid) with sid = -1 (no backing SSTable)."""
+    for key in sorted(k for k in table if lo <= k <= hi):
+        seq, vlen = table[key]
+        yield key, seq, vlen, -1
+
+
+def _sstable_source(sst: SSTable, lo: int, hi: int, charge_block):
+    """Cursor over one SSTable; charges each entered block exactly once
+    via `charge_block(sst, block_idx)`."""
+    last_blk = -1
+    for key, seq, vlen, blk in sst.block_iter(lo, hi):
+        if blk != last_blk:
+            last_blk = blk
+            charge_block(sst, blk)
+        yield key, seq, vlen, sst.sid
+
+
+def _level_source(sstables: list[SSTable], lo: int, hi: int, charge_block):
+    """Cursor over a non-overlapping sorted level: chains the per-SSTable
+    cursors of the run in key order, lazily (early `scan(lo, n)` exits
+    never touch later SSTables).  Seeks to the first overlapping table by
+    binary search — levels can hold hundreds of tables."""
+    a, b = 0, len(sstables)
+    while a < b:                      # first table with max_key >= lo
+        mid = (a + b) // 2
+        if sstables[mid].max_key < lo:
+            a = mid + 1
+        else:
+            b = mid
+    for i in range(a, len(sstables)):
+        sst = sstables[i]
+        if sst.min_key > hi:
+            break
+        yield from _sstable_source(sst, lo, hi, charge_block)
+
+
+@dataclasses.dataclass
+class SourceMap:
+    """Ordered scan sources + the priority boundaries for tier stats."""
+    sources: list                     # index == probe priority (0 = newest)
+    n_mem: int                        # sources [0, n_mem) are memtables
+    pc_pri: int                       # priority of the mPC source (-1: none)
+    sd_start: int                     # first SD-level priority
+
+    def classify(self, pri: int) -> str:
+        # Classification is by *level position*, matching get's
+        # served_fd/served_sd convention: a Mutant-migrated SSTable in an
+        # SD-range level charges FD I/O but still counts as SD-served,
+        # in both the point and scan hit-rate metrics.
+        if pri < self.n_mem:
+            return TIER_MEM
+        if pri == self.pc_pri:
+            return TIER_PC
+        if pri >= self.sd_start:
+            return TIER_SD
+        return TIER_FD
+
+
+def build_sources(db, lo: int, hi: int, charge_block) -> SourceMap:
+    """Assemble the scan sources of a TieredLSM in probe-priority order.
+
+    Mirrors `get`: memtable, immutable memtables (newest first), FD
+    levels top-down (each L0 SSTable is its own source, newest first;
+    deeper levels are single chained sources), the mutable promotion
+    cache, then the SD levels.
+    """
+    sources: list = [_mem_source(db.memtable, lo, hi)]
+    for imm in db.imm_memtables:
+        sources.append(_mem_source(imm, lo, hi))
+    n_mem = len(sources)
+    n_fd = min(db.cfg.n_fd_levels, len(db.levels))
+    for sst in db.levels[0]:          # L0 overlaps: one source each
+        if sst.overlaps(lo, hi):
+            sources.append(_sstable_source(sst, lo, hi, charge_block))
+    for li in range(1, n_fd):
+        if db.levels[li]:
+            sources.append(_level_source(db.levels[li], lo, hi,
+                                         charge_block))
+    pc_pri = -1
+    if db.cfg.hotrap:
+        pc_pri = len(sources)
+        sources.append(_mem_source(db.mpc.data, lo, hi))
+    sd_start = len(sources)
+    for li in range(n_fd, len(db.levels)):
+        if db.levels[li]:
+            sources.append(_level_source(db.levels[li], lo, hi,
+                                         charge_block))
+    return SourceMap(sources, n_mem, pc_pri, sd_start)
+
+
+def merge_scan(sources: list):
+    """k-way merge of priority-tagged ascending cursors.
+
+    Yields (key, seq, vlen, priority, sid) for the *winning* version of
+    each distinct key: ties on key resolve to the lowest priority (the
+    newest source), matching `get`'s top-down-first-match rule.
+    Tombstone winners are yielded too — the caller decides whether the
+    key is visible (a tombstone shadows every older version).
+    """
+    heap = []
+    for pri, src in enumerate(sources):
+        it = iter(src)
+        first = next(it, None)
+        if first is not None:
+            key, seq, vlen, sid = first
+            # (key, pri) is unique across the heap -> later fields never
+            # participate in comparisons.
+            heap.append((key, pri, seq, vlen, sid, it))
+    heapq.heapify(heap)
+    last_key = None
+    while heap:
+        key, pri, seq, vlen, sid, it = heap[0]
+        nxt = next(it, None)
+        if nxt is not None:
+            heapq.heapreplace(heap, (nxt[0], pri, nxt[1], nxt[2], nxt[3], it))
+        else:
+            heapq.heappop(heap)
+        if key == last_key:           # older version of an emitted key
+            continue
+        last_key = key
+        yield key, seq, vlen, pri, sid

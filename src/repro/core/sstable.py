@@ -128,6 +128,33 @@ class SSTable:
             return int(self.seqs[i]), int(self.vlens[i]), int(self.block_of[i])
         return None
 
+    def range_bounds(self, lo: int, hi: int) -> tuple[int, int]:
+        """Record index range [a, b) covering keys in [lo, hi]."""
+        a = int(np.searchsorted(self.keys, np.uint64(lo), "left"))
+        b = int(np.searchsorted(self.keys, np.uint64(hi), "right"))
+        return a, b
+
+    # record chunk converted per block_iter step: large enough to keep the
+    # numpy->Python conversion vectorised, small enough that limit-bounded
+    # scans never materialise a whole SSTable tail they won't consume
+    _ITER_CHUNK = 512
+
+    def block_iter(self, lo: int, hi: int):
+        """Cursor over records with lo <= key <= hi, in key order.
+
+        Yields (key, seq, vlen, block_idx) lazily (in _ITER_CHUNK record
+        chunks).  No I/O is charged here: the block_idx stream lets the
+        caller charge each data block exactly once as the cursor walks
+        into it (see core/scan.py).
+        """
+        a, b = self.range_bounds(lo, hi)
+        for start in range(a, b, self._ITER_CHUNK):
+            end = min(start + self._ITER_CHUNK, b)
+            yield from zip(self.keys[start:end].tolist(),
+                           self.seqs[start:end].tolist(),
+                           self.vlens[start:end].tolist(),
+                           self.block_of[start:end].tolist())
+
     @staticmethod
     def is_tombstone(vlen: int) -> bool:
         return vlen == int(_TOMBSTONE)

@@ -10,7 +10,11 @@ YCSB-style key distributions (paper §4.2):
 
 Read-write mixes (paper Table 2): RO 100%R, RW 75%R/25%I, WH 50%R/50%I,
 UH 50%R/50%U (update-heavy draws update keys from the *same* skewed
-distribution as reads — the paper's worst case for HotRAP).
+distribution as reads — the paper's worst case for HotRAP).  SR is the
+YCSB-E short-range-scan mix (95% scan / 5% insert): scan *start* keys
+come from the configured distribution (zipfian for YCSB-E) and scan
+lengths are uniform in [1, max_scan_len] (default 100), per the YCSB
+core workload definition.
 
 Twitter-like traces (paper §4.3): we do not ship the raw Twitter traces;
 `twitter_like_trace` synthesises a trace with a prescribed read ratio,
@@ -24,13 +28,15 @@ import dataclasses
 
 import numpy as np
 
-OP_READ, OP_INSERT, OP_UPDATE = 0, 1, 2
+OP_READ, OP_INSERT, OP_UPDATE, OP_SCAN = 0, 1, 2, 3
 
+# (read, insert, update, scan) fractions per mix
 MIXES = {
-    "RO": (1.00, 0.00, 0.00),
-    "RW": (0.75, 0.25, 0.00),
-    "WH": (0.50, 0.50, 0.00),
-    "UH": (0.50, 0.00, 0.50),
+    "RO": (1.00, 0.00, 0.00, 0.00),
+    "RW": (0.75, 0.25, 0.00, 0.00),
+    "WH": (0.50, 0.50, 0.00, 0.00),
+    "UH": (0.50, 0.00, 0.50, 0.00),
+    "SR": (0.00, 0.05, 0.00, 0.95),    # YCSB-E: scan-heavy
 }
 
 
@@ -49,6 +55,10 @@ class KeyDist:
     hot_ops: float = 0.95      # hotspot: fraction of ops hitting hot set
     zipf_s: float = 0.99
     hot_offset: float = 0.0    # shift the hotspot (dynamic workloads)
+    # cached zipfian CDF as (zipf_s, cdf) (O(n_keys) to build; reused
+    # across sample calls, rebuilt if n_keys or zipf_s change)
+    _zipf_cdf: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def sample(self, rng: np.random.Generator, m: int) -> np.ndarray:
         n = self.n_keys
@@ -68,12 +78,15 @@ class KeyDist:
             return _scramble((start + offs) % n, n)
         if self.kind == "zipfian":
             # draw ranks by inverse-CDF over 1/k^s, then scramble
-            ranks = np.arange(1, n + 1, dtype=np.float64)
-            w = 1.0 / np.power(ranks, self.zipf_s)
-            cdf = np.cumsum(w)
-            cdf /= cdf[-1]
+            if (self._zipf_cdf is None or self._zipf_cdf[0] != self.zipf_s
+                    or len(self._zipf_cdf[1]) != n):
+                ranks = np.arange(1, n + 1, dtype=np.float64)
+                w = 1.0 / np.power(ranks, self.zipf_s)
+                cdf = np.cumsum(w)
+                cdf /= cdf[-1]
+                self._zipf_cdf = (self.zipf_s, cdf)
             u = rng.random(m)
-            r = np.searchsorted(cdf, u)
+            r = np.searchsorted(self._zipf_cdf[1], u)
             return _scramble(r, n)
         raise ValueError(self.kind)
 
@@ -81,23 +94,30 @@ class KeyDist:
 @dataclasses.dataclass
 class Workload:
     ops: np.ndarray            # (m,) op codes
-    keys: np.ndarray           # (m,) key indices
+    keys: np.ndarray           # (m,) key indices (scan *start* for OP_SCAN)
     value_len: int
+    scan_lens: np.ndarray | None = None   # (m,) records per scan (0: not a scan)
 
 
 def ycsb(mix: str, dist: KeyDist, n_ops: int, value_len: int,
-         seed: int = 0) -> Workload:
+         seed: int = 0, max_scan_len: int = 100) -> Workload:
     rng = np.random.default_rng(seed)
-    r, i, u = MIXES[mix]
-    ops = rng.choice([OP_READ, OP_INSERT, OP_UPDATE], size=n_ops,
-                     p=[r, i, u])
+    r, i, u, s = MIXES[mix]
+    ops = rng.choice([OP_READ, OP_INSERT, OP_UPDATE, OP_SCAN], size=n_ops,
+                     p=[r, i, u, s])
     keys = dist.sample(rng, n_ops)
     # inserts append fresh keys beyond the loaded range
     n_ins = int((ops == OP_INSERT).sum())
     if n_ins:
         keys = keys.copy()
         keys[ops == OP_INSERT] = dist.n_keys + np.arange(n_ins)
-    return Workload(ops, keys, value_len)
+    scan_lens = None
+    if s > 0:
+        scan_lens = np.zeros(n_ops, dtype=np.int64)
+        is_scan = ops == OP_SCAN
+        scan_lens[is_scan] = rng.integers(1, max_scan_len + 1,
+                                          size=int(is_scan.sum()))
+    return Workload(ops, keys, value_len, scan_lens)
 
 
 def load_keys(n_keys: int, seed: int = 0) -> np.ndarray:
@@ -123,21 +143,22 @@ def twitter_like_trace(n_keys: int, n_ops: int, read_ratio: float,
     """
     rng = np.random.default_rng(seed)
     ops = np.where(rng.random(n_ops) < read_ratio, OP_READ, OP_UPDATE)
-    keys = np.zeros(n_ops, dtype=np.int64)
     hot_set = rng.integers(0, n_keys, size=max(1, int(0.03 * n_keys)))
     recent_w = rng.integers(0, n_keys, size=max(1, int(0.10 * n_keys)))
-    for j in range(n_ops):
-        if ops[j] == OP_READ:
-            u = rng.random()
-            if u < hot_frac * sunk_frac:
-                # hot AND sunk: the promotable class
-                keys[j] = hot_set[rng.integers(len(hot_set))]
-            elif u < sunk_frac:
-                keys[j] = rng.integers(0, n_keys)      # sunk, cold
-            else:
-                keys[j] = recent_w[rng.integers(len(recent_w))]
-        else:
-            keys[j] = recent_w[rng.integers(len(recent_w))]
+    # batch class selection (no per-op Python loop): reads split into
+    # hot-and-sunk / sunk-cold / recent by one uniform draw per op;
+    # writes always target the recently-written set.
+    u = rng.random(n_ops)
+    reads = ops == OP_READ
+    hot_sel = reads & (u < hot_frac * sunk_frac)
+    sunk_sel = reads & ~hot_sel & (u < sunk_frac)
+    recent_sel = ~hot_sel & ~sunk_sel
+    keys = np.empty(n_ops, dtype=np.int64)
+    keys[hot_sel] = hot_set[rng.integers(0, len(hot_set),
+                                         size=int(hot_sel.sum()))]
+    keys[sunk_sel] = rng.integers(0, n_keys, size=int(sunk_sel.sum()))
+    keys[recent_sel] = recent_w[rng.integers(0, len(recent_w),
+                                             size=int(recent_sel.sum()))]
     return Workload(ops, keys, value_len)
 
 

@@ -1,0 +1,360 @@
+"""Range-scan subsystem: merged-iterator correctness vs a dict-model
+oracle, I/O accounting, and the scan-side hotness/promotion pathway.
+
+The oracle: a scan must return exactly the live keys in range, ascending,
+each at its latest version — across overwrites, deletes, memtable
+rotation, flushes, compactions, retention, and promotion-cache residency,
+for every compared system (they all serve scans through the same merged
+iterator but interpose different caching/placement policies).
+"""
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, make_system
+from repro.core.baselines import SYSTEMS
+from repro.core.ralt import RALT, RaltConfig
+from repro.core.runner import (db_key_count, default_config, load_db,
+                               run_workload)
+from repro.core.sstable import SSTable, TOMBSTONE_VLEN
+from repro.core.storage import StorageSim
+from repro.data.workloads import MIXES, OP_INSERT, OP_SCAN, KeyDist, ycsb
+
+KIB = 1024
+
+
+def tiny_cfg(**kw):
+    base = dict(fd_size=256 * KIB, sd_size=2 * 1024 * KIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def oracle_scan(model, lo, n=None, hi=None):
+    keys = sorted(k for k, s in model.items()
+                  if s is not None and k >= lo and (hi is None or k <= hi))
+    return keys if n is None else keys[:n]
+
+
+# ----------------------------------------------------------------------
+# merged-iterator correctness
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("system", SYSTEMS)
+def test_scan_matches_model(system):
+    """Random put/delete/get/scan stream vs dict oracle, per system."""
+    db = make_system(system, tiny_cfg())
+    model = {}
+    rng = np.random.default_rng(3)
+    for _ in range(3000):
+        k = int(rng.integers(0, 700))
+        r = rng.random()
+        if r < 0.55:
+            model[k] = db.put(k, 100)
+        elif r < 0.65:
+            db.delete(k)
+            model[k] = None
+        elif r < 0.80:
+            db.get(k)
+        else:
+            lo = int(rng.integers(0, 700))
+            n = int(rng.integers(1, 40))
+            got = db.scan(lo, n)
+            want = oracle_scan(model, lo, n)
+            assert [g[0] for g in got] == want
+            for key, seq, vlen in got:
+                assert seq == model[key], (key, seq, model[key])
+                assert vlen != TOMBSTONE_VLEN
+
+
+@pytest.mark.parametrize("system", ["hotrap", "rocksdb_tiered", "sas_cache"])
+def test_scan_range_matches_model(system):
+    db = make_system(system, tiny_cfg())
+    model = {}
+    rng = np.random.default_rng(4)
+    for i in range(2500):
+        k = int(rng.integers(0, 600))
+        if rng.random() < 0.85:
+            model[k] = db.put(k, 120)
+        else:
+            db.delete(k)
+            model[k] = None
+    for _ in range(30):
+        lo = int(rng.integers(0, 600))
+        hi = lo + int(rng.integers(0, 200))
+        got = db.scan_range(lo, hi)
+        assert [g[0] for g in got] == oracle_scan(model, lo, hi=hi)
+        for key, seq, _ in got:
+            assert seq == model[key]
+
+
+def test_scan_sees_promotion_cache_residents():
+    """A record sitting in the mutable promotion cache must win over the
+    (older or equal) SD copy and appear exactly once in a scan."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    # force records into the mPC via repeated SD point-gets
+    target = None
+    for k in range(nk):
+        db.get(k)
+        if len(db.mpc) > 0:
+            target = next(iter(db.mpc.data))
+            break
+    assert target is not None, "no SD-served get populated the mPC"
+    got = db.scan_range(target, target)
+    assert [g[0] for g in got] == [target]
+    seq, vlen = db.mpc.get(target)
+    assert got[0][1] == seq
+
+
+def test_scan_tombstone_shadows_all_tiers():
+    """Delete in the memtable must suppress older flushed versions."""
+    db = make_system("rocksdb_tiered", tiny_cfg())
+    for k in range(0, 400):
+        db.put(k, 100)
+    db.flush_all()                      # versions now in SSTables
+    for k in range(100, 200):
+        db.delete(k)                    # tombstones in the memtable
+    got = [g[0] for g in db.scan_range(50, 250)]
+    assert got == [k for k in range(50, 251) if not (100 <= k < 200)
+                   and k < 400]
+
+
+def test_scan_limit_and_order():
+    db = make_system("rocksdb_tiered", tiny_cfg())
+    for k in range(500):
+        db.put(k, 100)
+    got = db.scan(123, 17)
+    assert [g[0] for g in got] == list(range(123, 140))
+    assert db.scan(10**9, 5) == []
+    assert db.scan(123, 0) == []
+    assert db.scan_range(300, 200) == []
+
+
+# ----------------------------------------------------------------------
+# I/O accounting
+# ----------------------------------------------------------------------
+def test_scan_charges_block_io():
+    """Scans over flushed data charge sequential reads; repeated scans of
+    a cached range are cheaper (block-cache hits are free)."""
+    db = make_system("rocksdb_tiered",
+                     tiny_cfg(block_cache_bytes=256 * KIB))
+    for k in range(2000):
+        db.put(k, 200)
+    db.flush_all()
+    r0 = sum(db.storage.dev[t].read_bytes for t in ("FD", "SD"))
+    db.scan_range(0, 500)
+    r1 = sum(db.storage.dev[t].read_bytes for t in ("FD", "SD"))
+    assert r1 > r0, "scan charged no I/O"
+    db.scan_range(0, 500)              # same range: blocks now cached
+    r2 = sum(db.storage.dev[t].read_bytes for t in ("FD", "SD"))
+    assert r2 - r1 < r1 - r0
+
+
+def test_block_iter_yields_range_and_blocks():
+    keys = np.arange(10, 400, 3, dtype=np.uint64)
+    n = len(keys)
+    sst = SSTable(keys, np.arange(1, n + 1), np.full(n, 500, np.uint32),
+                  "SD", 3, 0)
+    rows = list(sst.block_iter(100, 200))
+    assert [r[0] for r in rows] == [int(k) for k in keys if 100 <= k <= 200]
+    assert all(rows[i][3] <= rows[i + 1][3] for i in range(len(rows) - 1))
+    assert list(sst.block_iter(1000, 2000)) == []
+
+
+# ----------------------------------------------------------------------
+# scan-side hotness -> promotion
+# ----------------------------------------------------------------------
+def test_record_range_access_batch_feeds_scoring():
+    """Vectorized batch inserts must make the scanned keys hot, same as
+    an equivalent stream of point accesses."""
+    MIB = 1024 * 1024
+    cfg = RaltConfig(fd_size=4 * MIB, hot_set_limit=2 * MIB,
+                     phys_limit=int(0.6 * MIB), autotune=False)
+    r = RALT(cfg, StorageSim())
+    keys = np.arange(100, 150, dtype=np.uint64)
+    vlens = np.full(len(keys), 1000, dtype=np.uint32)
+    for _ in range(40):
+        r.record_range_access(100, 150, keys, vlens)
+    hot = r.is_hot_many(keys)
+    assert hot.mean() > 0.9
+    assert not r.is_hot(10**7)
+
+
+def test_scans_promote_sd_resident_hot_range():
+    """Repeatedly scanning an SD-resident range must route its records
+    through the promotion cache and raise the scan FD hit rate."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.reset_storage()
+    lo = nk // 3
+    first = db.scan(lo, 50)
+    assert len(first) == 50
+    for _ in range(200):
+        db.scan(lo, 50)
+    s = db.stats
+    assert s.scan_pc_inserts > 0, "scan-side promotion never fired"
+    assert s.scan_fd_hit_rate > 0.5, s.scan_fd_hit_rate
+    # later scans must return the same records (promotion is transparent)
+    again = db.scan(lo, 50)
+    assert [g[0] for g in again] == [g[0] for g in first]
+
+
+def test_scan_touched_list_covers_shallower_sd_levels():
+    """§3.3 for scans: the touched list of a promoted record must include
+    every SD table `get` would probe above the winner, so a newer version
+    sinking into a shallower SD level aborts a deferred insert."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    n_fd = db.cfg.n_fd_levels
+    probe = None
+    for li in range(n_fd + 1, len(db.levels)):      # a non-first SD level
+        for s in db.levels[li]:
+            key = s.min_key
+            # only meaningful if a shallower SD level covers this key
+            for lj in range(n_fd, li):
+                if db.levels[lj] and db._bisect_level(db.levels[lj],
+                                                      key) is not None:
+                    probe = (key, s.sid, lj)
+                    break
+            if probe:
+                break
+        if probe:
+            break
+    assert probe is not None, "loaded DB has only one populated SD level"
+    key, winner_sid, shallow_li = probe
+    touched = db._sd_touched_for_key(key, winner_sid)
+    assert touched[-1] == winner_sid
+    shallow_sid = db.levels[shallow_li][
+        db._bisect_level(db.levels[shallow_li], key)].sid
+    assert shallow_sid in touched
+
+
+def test_scan_model_with_deferred_pc_inserts():
+    """Scans + deferred PC inserts + interleaved writes must never let a
+    stale promoted version shadow a newer one (scan-side §3.3)."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.defer_pc_inserts = 24
+    model = {k: None for k in range(nk)}   # seqs unknown from load
+    rng = np.random.default_rng(11)
+    for _ in range(4000):
+        k = int(rng.integers(0, nk))
+        r = rng.random()
+        if r < 0.30:
+            model[k] = db.put(k, 1000)
+        elif r < 0.60:
+            got = db.get(k)
+            if model.get(k) is not None:
+                assert got is not None and got[0] == model[k]
+        else:
+            lo = int(rng.integers(0, nk))
+            for key, seq, _ in db.scan(lo, int(rng.integers(1, 30))):
+                if model.get(key) is not None:
+                    assert seq == model[key], (key, seq, model[key])
+
+
+def test_nohotcheck_ablation_promotes_all_scanned_sd_records():
+    """hotness_check=False must promote every SD-served scanned record
+    (Table-4 ablation parity with the point-get path)."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap_nohotcheck", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.reset_storage()
+    db.scan(nk // 2, 40)
+    s = db.stats
+    assert s.scan_served_sd > 0
+    assert s.scan_pc_inserts == s.scan_served_sd  # no hotness filtering
+
+
+def test_scan_counts_records_toward_baseline_counters():
+    """Mutant migrations and PrismDB clock sweeps are driven by *record*
+    accesses; a 40-record scan must advance them by ~40, not 1."""
+    mut = make_system("mutant", tiny_cfg())
+    for k in range(3000):
+        mut.put(k, 200)
+    mut.flush_all()
+    mut.migration_interval = 100
+    before = mut._accesses
+    out = mut.scan(0, 40)
+    assert mut._accesses - before == len(out) == 40
+    prism = make_system("prismdb", tiny_cfg())
+    for k in range(500):
+        prism.put(k, 200)
+    before = prism._reads
+    out = prism.scan(0, 40)
+    assert prism._reads - before == len(out) == 40
+    assert all(prism.clock.get(k) for k, _, _ in out)
+
+
+def test_zipf_cdf_cache_invalidated_on_s_change():
+    import dataclasses as dc
+    d = KeyDist("zipfian", 5000, zipf_s=0.99)
+    rng = np.random.default_rng(0)
+    d.sample(rng, 100)
+    flat = dc.replace(d, zipf_s=0.01)      # near-uniform
+    k1 = flat.sample(np.random.default_rng(1), 20_000)
+    k2 = KeyDist("zipfian", 5000, zipf_s=0.01).sample(
+        np.random.default_rng(1), 20_000)
+    assert (k1 == k2).all(), "stale CDF reused after zipf_s change"
+
+
+# ----------------------------------------------------------------------
+# workload + runner integration
+# ----------------------------------------------------------------------
+def test_ycsb_e_mix_shape():
+    dist = KeyDist("zipfian", 10_000)
+    wl = ycsb("SR", dist, 20_000, 1000, seed=5)
+    r, i, u, s = MIXES["SR"]
+    frac_scan = (wl.ops == OP_SCAN).mean()
+    assert abs(frac_scan - s) < 0.02
+    assert abs((wl.ops == OP_INSERT).mean() - i) < 0.02
+    lens = wl.scan_lens[wl.ops == OP_SCAN]
+    assert lens.min() >= 1 and lens.max() <= 100
+    assert wl.scan_lens[wl.ops != OP_SCAN].max() == 0
+
+
+def test_point_mixes_have_no_scan_lens():
+    wl = ycsb("RW", KeyDist("uniform", 1000), 5000, 1000, seed=5)
+    assert wl.scan_lens is None
+    assert not (wl.ops == OP_SCAN).any()
+
+
+@pytest.mark.parametrize("system", ["rocksdb_tiered", "hotrap"])
+def test_runner_drives_scan_workload(system):
+    cfg = default_config("tiny")
+    db = make_system(system, cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.reset_storage()
+    wl = ycsb("SR", KeyDist("zipfian", nk), 1200, 1000, seed=7)
+    res = run_workload(db, wl, name=system)
+    assert res.stats["scans"] > 0
+    assert res.stats["scanned_records"] > res.stats["scans"]
+    assert res.throughput > 0
+    assert 0.0 <= res.scan_fd_hit_rate <= 1.0
+    assert len(res.get_latencies) > 0
+
+
+def test_hotrap_scan_hit_rate_beats_tiered():
+    """The acceptance direction: HotRAP >= plain tiered on YCSB-E
+    FD hit rate (scan-side promotion pays off)."""
+    cfg = default_config("tiny")
+    nk = db_key_count(cfg, 1000)
+    out = {}
+    for system in ("rocksdb_tiered", "hotrap"):
+        db = make_system(system, cfg)
+        load_db(db, nk, 1000, seed=0)
+        db.reset_storage()
+        wl = ycsb("SR", KeyDist("zipfian", nk), 2500, 1000, seed=7)
+        out[system] = run_workload(db, wl, name=system)
+    assert (out["hotrap"].scan_fd_hit_rate
+            >= out["rocksdb_tiered"].scan_fd_hit_rate)
