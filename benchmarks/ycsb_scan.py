@@ -9,8 +9,27 @@ records served from memtables, FD levels, or the promotion cache) over
 the final 10% of the run.  HotRAP's scan-side hotness pathway
 (core/scan.py) should place it at or above every tiered baseline on
 hit rate.
+
+Two extra emissions cover the PR-3 versioned read path:
+
+* ``remix_merge_ops`` — the same workload on the same loaded DB with
+  ``remix_views`` off (PR-2 per-query k-way heap) vs on (persistent
+  GroupViews): cursor-pull + merge-compare operations per scanned
+  record, and their ratio.  The ISSUE-3 acceptance bound is ratio >= 2.
+* ``range promotion`` counters ride along in the hotrap row's derived
+  column.
+
+``--smoke`` (used by CI) runs the quick profile and exits non-zero
+unless (a) HotRAP's scan FD hit rate is at least that of every tiered
+baseline and (b) the REMIX merge-ops ratio is >= 2 — a fast perf-
+regression tripwire.
 """
 from __future__ import annotations
+
+import dataclasses
+import sys
+
+import numpy as np
 
 from repro.core.runner import run_workload
 from repro.data.workloads import KeyDist, ycsb
@@ -36,8 +55,14 @@ def run(value_len: int = 1000, tag: str = "ycsb_e",
         wl = ycsb("SR", dist, ops, value_len, seed=13)
         res = run_workload(db, wl, name=system)
         us = 1e6 / max(res.throughput, 1e-9)
+        extra = ""
+        if system == "hotrap":
+            extra = (f";range_promos={res.stats['range_promotions']}"
+                     f";range_promoted={res.stats['range_promoted_records']}")
         emit(f"{tag}/zipfian/SR/{system}", us,
-             f"thr={res.throughput:.0f}ops/s;scan_hit={res.scan_fd_hit_rate:.3f}")
+             f"thr={res.throughput:.0f}ops/s;"
+             f"scan_hit={res.scan_fd_hit_rate:.3f};"
+             f"merge_ops={res.scan_merge_ops_per_record:.2f}{extra}")
         results[system] = res
     tiered = {s: r for s, r in results.items()
               if s not in ("hotrap", "rocksdb_fd")}
@@ -49,9 +74,80 @@ def run(value_len: int = 1000, tag: str = "ycsb_e",
     return results
 
 
+def run_remix_ablation(value_len: int = 1000, tag: str = "ycsb_e",
+                       system: str = "rocksdb_tiered") -> float:
+    """Merged-scan microbenchmark: per-query k-way heap (PR 2) vs
+    persistent REMIX GroupViews (PR 3) on the identical loaded DB.
+
+    Isolates the merge machinery: a deterministic update pass creates
+    cross-level duplicate versions and L0 runs (the shape that makes
+    k-way merging expensive), then a pure stream of 50-record scans at
+    zipfian start keys runs in both modes.  Returns
+    heap_ops_per_record / view_ops_per_record (acceptance bound: >= 2).
+    The per-system YCSB-E rows above report the end-to-end merge_ops
+    including the 5%-insert memtable traffic the view cannot absorb.
+    """
+    cfg = make_cfg()
+    scans = max(n_ops() // 100, 300)
+    dist = None
+    per_mode = {}
+    for remix in (False, True):
+        db, nk = DB_CACHE.get(system, cfg, value_len)
+        db.cfg = dataclasses.replace(db.cfg, remix_views=remix)
+        rng = np.random.default_rng(17)
+        for k in rng.integers(0, nk, size=nk // 5):   # duplicate versions
+            db.put(int(k), value_len)
+        db._rotate_memtable()
+        db._flush_imm_memtables()                     # L0 runs, no compaction
+        dist = dist or KeyDist("zipfian", nk)
+        starts = dist.sample(np.random.default_rng(23), scans)
+        db.stats.scanned_records = 0
+        db.stats.scan_cursor_pulls = db.stats.scan_merge_compares = 0
+        for lo in starts:
+            db.scan(int(lo), 50)
+        per_mode[remix] = db.stats.scan_merge_ops_per_record
+        mode = "view" if remix else "heap"
+        emit(f"{tag}/remix_merge_ops/{system}/{mode}",
+             db.stats.scan_merge_ops_per_record,
+             f"pulls={db.stats.scan_cursor_pulls};"
+             f"cmps={db.stats.scan_merge_compares};"
+             f"scanned={db.stats.scanned_records};"
+             f"view_builds={db.stats.view_builds}")
+    ratio = per_mode[False] / max(per_mode[True], 1e-9)
+    emit(f"{tag}/remix_merge_ops/{system}/ratio", ratio,
+         f"heap={per_mode[False]:.2f};view={per_mode[True]:.2f}")
+    return ratio
+
+
+def smoke() -> None:
+    """CI tripwire (see .github/workflows/ci.yml bench-smoke)."""
+    results = run(1000, quick=True)
+    ratio = run_remix_ablation(1000)
+    hot = results["hotrap"].scan_fd_hit_rate
+    baselines = {s: r.scan_fd_hit_rate for s, r in results.items()
+                 if s not in ("hotrap", "rocksdb_fd")}
+    best = max(baselines.values())
+    failures = []
+    if hot < best:
+        failures.append(f"hotrap scan FD hit rate {hot:.3f} < "
+                        f"best tiered baseline {best:.3f} ({baselines})")
+    if ratio < 2.0:
+        failures.append(f"REMIX merge-ops ratio {ratio:.2f} < 2.0")
+    if failures:
+        for f in failures:
+            print(f"SMOKE FAIL: {f}", flush=True)
+        raise SystemExit(1)
+    print(f"SMOKE OK: hotrap_hit={hot:.3f} >= best_tiered={best:.3f}, "
+          f"remix_ratio={ratio:.2f} >= 2.0", flush=True)
+
+
 def main(quick: bool = False):
     run(1000, quick=quick)
+    run_remix_ablation(1000)
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main(quick="--quick" in sys.argv)

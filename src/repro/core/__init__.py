@@ -3,11 +3,14 @@
 Public API:
     LSMConfig, TieredLSM      — the engine (core/lsm.py); point ops plus
                                 `scan`/`scan_range` (core/scan.py)
+    Version, Superversion     — immutable read-path snapshots + REMIX
+                                GroupViews (core/version.py)
     RALT, RaltConfig          — the hotness tracker (core/ralt.py)
     make_system, SYSTEMS      — paper baselines (core/baselines.py)
     StorageSim                — simulated tiered devices (core/storage.py)
 """
 from .lsm import LSMConfig, TieredLSM          # noqa: F401
+from .version import GroupView, Superversion, Version  # noqa: F401
 from .ralt import RALT, RaltConfig             # noqa: F401
 from .baselines import SYSTEMS, make_system    # noqa: F401
 from .storage import StorageSim                # noqa: F401

@@ -63,9 +63,10 @@ class Mutant(TieredLSM):
         self.temps: dict[int, float] = {}
         self._accesses = 0
 
-    def _search_levels(self, key, level_range, fg, touched=None):
+    def _search_levels(self, key, level_range, fg, touched=None,
+                       version=None):
         # wrap to count per-sstable accesses: piggyback on find path
-        res = super()._search_levels(key, level_range, fg, touched)
+        res = super()._search_levels(key, level_range, fg, touched, version)
         if res is not None:
             sid = res[2]
             self.temps[sid] = self.temps.get(sid, 0.0) + 1.0
@@ -121,10 +122,11 @@ class Mutant(TieredLSM):
                                        component="migration")
                 s.tier = tgt
 
-    def _install(self, li, removed, added):
-        super()._install(li, removed, added)
-        for s in removed:
-            self.temps.pop(s.sid, None)
+    def _install_edits(self, edits):
+        super()._install_edits(edits)
+        for _, removed, _ in edits:
+            for s in removed:
+                self.temps.pop(s.sid, None)
 
 
 # ----------------------------------------------------------------------
@@ -160,9 +162,11 @@ class SASCache(TieredLSM):
         else:
             read("FD", BLOCK_BYTES, fg=fg, component=component)
 
-    def _search_levels(self, key, level_range, fg, touched=None):
+    def _search_levels(self, key, level_range, fg, touched=None,
+                       version=None):
+        levels = (version or self.version).levels
         for li in level_range:
-            sstables = self.levels[li]
+            sstables = levels[li]
             if not sstables:
                 continue
             if li == 0:
@@ -281,8 +285,7 @@ class PrismDB(TieredLSM):
             self.storage.seq_write("SD", sd_bytes, fg=False,
                                    component="compaction")
         self.stats.compaction_bytes += fd_bytes + sd_bytes
-        self._install(li, inputs, new_fd)
-        self._install(lj, nexts, new_sd)
+        self._install_edits([(li, inputs, new_fd), (lj, nexts, new_sd)])
         for s in all_inputs:
             s.compacted = True
             self._sid_compacted[s.sid] = True

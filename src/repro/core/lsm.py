@@ -1,4 +1,5 @@
-"""Tiered LSM-tree engine with HotRAP retention & promotion.
+"""Tiered LSM-tree engine with HotRAP retention & promotion, on a
+versioned read path.
 
 One engine implements the paper's HotRAP plus every compared system via
 feature flags (see core/baselines.py):
@@ -14,6 +15,27 @@ feature flags (see core/baselines.py):
     fall-back-to-oldest;
   * §3.6's shrunk-first-SD-level write-amplification option.
 
+Version / view architecture (core/version.py)
+---------------------------------------------
+The level lists live inside an immutable ``Version`` (RocksDB-style).
+Every flush, compaction install, and checker promotion *publishes* a
+fresh Version via ``_publish``; nothing ever mutates a published one.
+``get`` and ``_scan`` pin ``self.version`` once at entry and resolve
+entirely against it, and freezing the mPC pins a ``Superversion``
+(Version + imm-memtable snapshot) that the background Checker later
+searches — the paper's "the Checker sees the superversion it froze"
+argument is object identity here, verified by refcounts in tests.
+``self.levels`` remains available as a read-only property over the
+current Version for introspection and the compaction planner (which
+runs at install points, where it is the sole mutator).
+
+On top of each Version, scans use REMIX-style cross-run ``GroupView``s
+(one per level group, cached by group signature across installs) so the
+per-query merge is two ordered views against the memtables/mPC instead
+of a per-level cursor heap; see core/scan.py for the merge and the
+merge-cost accounting, and ``_record_scan_hotness`` for scan-side
+hotness including whole-range promotion.
+
 Read semantics are faithful top-down-first-match (NOT max-seq), so the
 shielding hazards the paper's concurrency control addresses are real
 hazards here too — property tests verify the protocol keeps lookups
@@ -27,10 +49,11 @@ import numpy as np
 
 from .promotion import ImmutablePromotionCache, MutablePromotionCache
 from .ralt import RALT, RaltConfig
-from .scan import MAX_KEY, build_sources, merge_scan
+from .scan import MAX_KEY, MergeCounters, build_sources, merge_scan
 from .sstable import (BLOCK_BYTES, KEY_BYTES, TOMBSTONE_VLEN, SSTable,
                       merge_runs, split_into_sstables)
 from .storage import BlockCache, StorageSim
+from .version import GroupView, Superversion, Version, ViewCache
 
 MIB = 1024 * 1024
 
@@ -58,6 +81,11 @@ class LSMConfig:
     ralt_hot_limit_frac: float = 0.50    # initial: 50% of FD (paper §4.1)
     ralt_phys_limit_frac: float = 0.15   # initial: 15% of FD
     ralt_autotune: bool = True
+    # --- versioned read path (PR 3) ---
+    remix_views: bool = True             # REMIX cross-run views for scans
+    range_promotion: bool = True         # whole-range promotion on hot scans
+    range_promo_frac: float = 0.5        # range is hot when RALT hot bytes
+                                         # >= frac * scanned HotRAP bytes
 
     def level_caps(self) -> list[float]:
         """Byte capacity per level (L0 handled by count, entry is inf)."""
@@ -107,6 +135,20 @@ class Stats:
     scan_served_sd: int = 0
     scan_pc_inserts: int = 0             # scan-side PC insert *attempts*
                                          # (the §3.3 check may still abort)
+    # --- versioned read path / merge cost ---
+    scan_cursor_pulls: int = 0           # records drawn from scan cursors
+    scan_merge_compares: int = 0         # modelled heap/2-way compares
+    view_builds: int = 0                 # GroupView constructions
+    version_installs: int = 0            # Versions published
+    range_promotions: int = 0            # whole-range promotion batches
+    range_promoted_records: int = 0      # records in those batches
+
+    @property
+    def scan_merge_ops_per_record(self) -> float:
+        """Cursor pulls + merge compares per scanned record — the REMIX
+        acceptance metric (lower is better)."""
+        return ((self.scan_cursor_pulls + self.scan_merge_compares)
+                / max(self.scanned_records, 1))
 
     @property
     def fd_hit_rate(self) -> float:
@@ -131,7 +173,9 @@ class TieredLSM:
         self.cfg = cfg
         self.storage = storage or StorageSim()
         self.caps = cfg.level_caps()
-        self.levels: list[list[SSTable]] = [[] for _ in self.caps]
+        self._next_vid = 0
+        self.version = self._make_version([[] for _ in self.caps]).ref()
+        self._view_cache = ViewCache()
         self.memtable: dict[int, tuple[int, int]] = {}
         self.memtable_bytes = 0
         self.imm_memtables: list[dict[int, tuple[int, int]]] = []
@@ -161,6 +205,50 @@ class TieredLSM:
         self._deferred_pc: list[tuple[int, int, int, int, list[int]]] = []
 
     # ------------------------------------------------------------------
+    # version publishing
+    # ------------------------------------------------------------------
+    @property
+    def levels(self) -> list[list[SSTable]]:
+        """The current Version's level lists (read-only by contract:
+        mutations must go through ``_publish``)."""
+        return self.version.levels
+
+    def _make_version(self, levels: list[list[SSTable]]) -> Version:
+        v = Version(levels, self._next_vid)
+        self._next_vid += 1
+        return v
+
+    def _publish(self, new_levels: list[list[SSTable]]) -> None:
+        """Install a new Version (flush/compaction/promotion install).
+        Readers holding the old Version keep a consistent snapshot; the
+        engine swaps its own reference atomically (single mutator)."""
+        old = self.version
+        self.version = self._make_version(new_levels).ref()
+        old.unref()
+        self.stats.version_installs += 1
+
+    def _levels_with(self, li: int, new_list: list[SSTable]
+                     ) -> list[list[SSTable]]:
+        """Copy of the current level lists with level `li` replaced.
+        Untouched levels share their (immutable) lists with the old
+        Version — the RocksDB Version-edit trick."""
+        levels = list(self.version.levels)
+        levels[li] = new_list
+        return levels
+
+    def group_view(self, version: Version, group: str) -> GroupView | None:
+        """The REMIX GroupView of a level group ("FD" or "SD") for a
+        Version, from the signature-keyed cache (built on first use
+        after the group's composition changes, then reused)."""
+        n_fd = self.cfg.n_fd_levels
+        sig = (group,) + version.group_signature(group, n_fd)
+        before = self._view_cache.builds
+        view = self._view_cache.get(
+            sig, lambda: version.group_runs(group, n_fd))
+        self.stats.view_builds += self._view_cache.builds - before
+        return view
+
+    # ------------------------------------------------------------------
     # public API
     # ------------------------------------------------------------------
     def put(self, key: int, vlen: int) -> int:
@@ -183,9 +271,14 @@ class TieredLSM:
         return self.put(key, TOMBSTONE_VLEN)
 
     def get(self, key: int):
-        """Returns (seq, vlen) of the visible version, or None."""
+        """Returns (seq, vlen) of the visible version, or None.
+
+        Resolves against the Version pinned right after the clock tick:
+        a checker/compaction fired by the tick publishes first, then the
+        whole probe sequence sees one consistent snapshot."""
         self.stats.gets += 1
         self._tick()
+        v = self.version
         # 1. memtables
         for table in [self.memtable, *self.imm_memtables]:
             hit = table.get(key)
@@ -194,7 +287,7 @@ class TieredLSM:
                 return self._finish_get(key, hit, tier=None)
         # 2. FD levels
         hit = self._search_levels(key, range(0, self.cfg.n_fd_levels),
-                                  fg=True)
+                                  fg=True, version=v)
         if hit is not None:
             self.stats.served_fd += 1
             return self._finish_get(key, hit[:2], tier="FD")
@@ -206,8 +299,8 @@ class TieredLSM:
         # 4. SD levels (recording touched SSTables for the §3.3 check)
         touched: list[int] = []
         hit = self._search_levels(key, range(self.cfg.n_fd_levels,
-                                             len(self.levels)),
-                                  fg=True, touched=touched)
+                                             len(v.levels)),
+                                  fg=True, touched=touched, version=v)
         if hit is not None:
             self.stats.served_sd += 1
             seq, vlen, _ = hit
@@ -237,11 +330,13 @@ class TieredLSM:
         self._tick()
         if limit is not None and limit <= 0:
             return []
-        smap = build_sources(self, lo, hi, self._scan_charge_block)
+        v = self.version               # pinned snapshot for the whole scan
+        counters = MergeCounters()
+        smap = build_sources(self, v, lo, hi, self._scan_charge_block)
         out: list[tuple[int, int, int]] = []
         sd_hits: list[tuple[int, int, int, int]] = []
         st = self.stats
-        for key, seq, vlen, pri, sid in merge_scan(smap.sources):
+        for key, seq, vlen, pri, sid in merge_scan(smap.sources, counters):
             if vlen == TOMBSTONE_VLEN:
                 continue
             out.append((key, seq, vlen))
@@ -258,17 +353,35 @@ class TieredLSM:
             if limit is not None and len(out) >= limit:
                 break
         st.scanned_records += len(out)
+        st.scan_cursor_pulls += counters.pulls
+        st.scan_merge_compares += counters.compares
         if self.cfg.hotrap and self.ralt is not None and out:
-            self._record_scan_hotness(lo, hi, out, sd_hits)
+            # clamp an open-ended scan(lo, n) to the range actually served
+            hi_eff = out[-1][0] if limit is not None else hi
+            self._record_scan_hotness(lo, hi_eff, out, sd_hits, v)
         return out
 
     def _record_scan_hotness(self, lo: int, hi: int,
                              out: list[tuple[int, int, int]],
-                             sd_hits: list[tuple[int, int, int, int]]) -> None:
-        """Scan-side hotness pathway: batch-log every served record in
-        RALT, then route SD-served records that RALT already considers
-        hot into the promotion cache via the same §3.3-checked insert as
-        point lookups (the touched SSTable is the record's source)."""
+                             sd_hits: list[tuple[int, int, int, int]],
+                             version: Version) -> None:
+        """Scan-side hotness pathway, on the scan's pinned Version.
+
+        Every served record is batch-logged in RALT (scan-length-aware
+        scoring: one scan contributes ~one point-get worth of score,
+        spread over its records).  SD-served records then promote:
+
+        * *range promotion*: when RALT's fence-pointer index says the
+          scanned range itself is hot (hot HotRAP bytes >= range_promo_frac
+          of the scanned bytes), the whole materialized SD residue of the
+          range enters the mPC in one batch — repeatedly scanned ranges
+          move to FD wholesale instead of key by key;
+        * otherwise per record, gated by the vectorized `is_hot_many`.
+
+        Both paths run the §3.3 concurrency check per record with
+        touched-SSTable lists computed vectorized on the pinned Version
+        (`Version.sd_touched_many`).
+        """
         keys = np.fromiter((k for k, _, _ in out), dtype=np.uint64,
                            count=len(out))
         vlens = np.fromiter((v for _, _, v in out), dtype=np.uint32,
@@ -278,33 +391,43 @@ class TieredLSM:
             return
         skeys = np.fromiter((k for k, _, _, _ in sd_hits), dtype=np.uint64,
                             count=len(sd_hits))
-        hot = self.ralt.is_hot_many(skeys)
-        for (key, seq, vlen, sid), h in zip(sd_hits, hot):
-            # Table-4 ablation parity: hotness_check=False promotes every
-            # SD-served record, on scans just like on point gets.
-            if h or not self.cfg.hotness_check:
+        wsids = np.fromiter((s for _, _, _, s in sd_hits), dtype=np.int64,
+                            count=len(sd_hits))
+        if (self.cfg.range_promotion and self.cfg.hotness_check
+                and self._scanned_range_is_hot(lo, hi, out)):
+            touched = version.sd_touched_many(skeys, wsids,
+                                              self.cfg.n_fd_levels)
+            self.stats.range_promotions += 1
+            self.stats.range_promoted_records += len(sd_hits)
+            for (key, seq, vlen, _), t in zip(sd_hits, touched):
                 self.stats.scan_pc_inserts += 1
-                self._insert_pc(key, seq, vlen,
-                                self._sd_touched_for_key(key, sid))
+                self._insert_pc(key, seq, vlen, t)
+            return
+        hot = self.ralt.is_hot_many(skeys)
+        # Table-4 ablation parity: hotness_check=False promotes every
+        # SD-served record, on scans just like on point gets.
+        if not self.cfg.hotness_check:
+            hot = np.ones(len(sd_hits), dtype=bool)
+        sel = np.flatnonzero(hot)
+        if not len(sel):
+            return
+        touched = version.sd_touched_many(skeys[sel], wsids[sel],
+                                          self.cfg.n_fd_levels)
+        for j, t in zip(sel, touched):
+            key, seq, vlen, _ = sd_hits[j]
+            self.stats.scan_pc_inserts += 1
+            self._insert_pc(key, seq, vlen, t)
 
-    def _sd_touched_for_key(self, key: int, winner_sid: int) -> list[int]:
-        """The §3.3 touched-SSTable list for one scanned key: every SD
-        table `get` would have probed top-down before finding the winner.
-        A newer version could sink into any of them, so a compaction of
-        any must abort the (possibly deferred) PC insert — the winner's
-        table alone is not enough."""
-        touched: list[int] = []
-        for li in range(self.cfg.n_fd_levels, len(self.levels)):
-            sstables = self.levels[li]
-            if not sstables:
-                continue
-            idx = self._bisect_level(sstables, key)
-            if idx is None:
-                continue
-            touched.append(sstables[idx].sid)
-            if sstables[idx].sid == winner_sid:
-                break
-        return touched
+    def _scanned_range_is_hot(self, lo: int, hi: int,
+                              out: list[tuple[int, int, int]]) -> bool:
+        """Range-promotion trigger: RALT's O(1) per-run hot-bytes index
+        says at least `range_promo_frac` of the scanned HotRAP bytes in
+        [lo, hi] belong to the hot set."""
+        scanned_bytes = sum(KEY_BYTES + v for _, _, v in out)
+        if scanned_bytes <= 0:
+            return False
+        hot_bytes = self.ralt.range_hot_bytes(lo, hi)
+        return hot_bytes >= self.cfg.range_promo_frac * scanned_bytes
 
     def _scan_charge_block(self, sst: SSTable, blk: int) -> None:
         """Charge one scanned data block (block-cache hits are free).
@@ -330,9 +453,11 @@ class TieredLSM:
         return seq, vlen
 
     def _search_levels(self, key: int, level_range, fg: bool,
-                       touched: list[int] | None = None):
+                       touched: list[int] | None = None,
+                       version: Version | None = None):
+        levels = (version or self.version).levels
         for li in level_range:
-            sstables = self.levels[li]
+            sstables = levels[li]
             if not sstables:
                 continue
             if li == 0:
@@ -411,20 +536,24 @@ class TieredLSM:
                 self.mpc = MutablePromotionCache()
             return
         records = sorted((k, sv[0], sv[1]) for k, sv in self.mpc.data.items())
-        # snapshot = superversion reference (paper step 4, under DB mutex)
-        snap_levels = [list(self.levels[li])
-                       for li in range(self.cfg.n_fd_levels)]
-        snap_imms = [dict(m) for m in self.imm_memtables]
-        immpc = ImmutablePromotionCache(records, snap_levels, snap_imms)
+        # pin the superversion (paper step 4, under DB mutex): the
+        # current Version plus the immutable memtables, by reference —
+        # installs after this point publish new Versions and cannot
+        # perturb what the Checker will search.
+        sv = Superversion(self.version.ref(),
+                          [dict(m) for m in self.imm_memtables])
+        immpc = ImmutablePromotionCache(records, sv)
         self.immpcs.append(immpc)
         self.mpc = MutablePromotionCache()
         self._checker_queue.append((self.now + self.cfg.checker_delay_ops,
                                     immpc))
 
     def _run_checker(self, immpc: ImmutablePromotionCache) -> None:
-        """Background Checker (Fig. 5 steps 5-11)."""
+        """Background Checker (Fig. 5 steps 5-11), against the frozen
+        Superversion pinned at freeze time."""
         self.stats.checker_runs += 1
         if immpc not in self.immpcs:
+            immpc.sv.release()              # no-op if already released
             return
         hot: list[tuple[int, int, int]] = []
         for key, seq, vlen in immpc.records:
@@ -439,6 +568,7 @@ class TieredLSM:
                 continue
             hot.append((key, seq, vlen))
         self.immpcs.remove(immpc)
+        immpc.sv.release()                      # unpin the frozen Version
         if not hot:
             return
         hot_bytes = sum(KEY_BYTES + v for _, _, v in hot)
@@ -455,17 +585,18 @@ class TieredLSM:
         self.storage.seq_write("FD", sst.size_bytes, fg=False,
                                component="promotion")
         self.stats.promoted_bytes += sst.size_bytes
-        self.levels[0].insert(0, sst)
+        self._publish(self._levels_with(0, [sst] + self.version.levels[0]))
         self._maybe_compact()
 
     def _newer_in_snapshot(self, key: int, seq: int,
                            immpc: ImmutablePromotionCache) -> bool:
-        """Fig. 5 step 8: newer version in snapshot imm-memtables/FD levels."""
-        for m in immpc.snapshot_imm_memtables:
+        """Fig. 5 step 8: newer version in the frozen superversion's
+        imm-memtables / FD levels."""
+        for m in immpc.sv.imm_memtables:
             hit = m.get(key)
             if hit is not None and hit[0] > seq:
                 return True
-        for sstables in immpc.snapshot:
+        for sstables in immpc.sv.version.levels[:self.cfg.n_fd_levels]:
             for s in sstables:
                 if s.min_key <= key <= s.max_key and s.bloom.may_contain(key):
                     found = s.find(key)
@@ -507,7 +638,10 @@ class TieredLSM:
                           self.cfg.bits_per_key)
             self.storage.seq_write("FD", sst.size_bytes, fg=False,
                                    component="flush")
-            self.levels[0].insert(0, sst)
+            # each flush publishes a new Version with the run at the L0
+            # front (newest first)
+            self._publish(self._levels_with(0,
+                                            [sst] + self.version.levels[0]))
             self.stats.flushes += 1
 
     # ------------------------------------------------------------------
@@ -607,8 +741,8 @@ class TieredLSM:
                 self.storage.seq_write("SD", sd_bytes, fg=False,
                                        component="compaction")
             self.stats.compaction_bytes += fd_bytes + sd_bytes
-            self._install(li, inputs, new_fd)
-            self._install(lj, nexts, new_sd)
+            self._install_edits([(li, inputs, new_fd),
+                                 (lj, nexts, new_sd)])
         else:
             runs = [(s.keys, s.seqs, s.vlens) for s in all_inputs]
             merged = merge_runs(runs, drop_tombstones=last_level)
@@ -620,8 +754,8 @@ class TieredLSM:
                 self.storage.seq_write(tier, out_bytes, fg=False,
                                        component="compaction")
             self.stats.compaction_bytes += out_bytes
-            self._install(li, inputs, [])
-            self._install(lj, nexts, new)
+            self._install_edits([(li, inputs, []),
+                                 (lj, nexts, new)])
         for s in all_inputs:
             s.being_compacted = False
             s.compacted = True
@@ -713,19 +847,29 @@ class TieredLSM:
         return ((wk[fd_sel], ws[fd_sel], wv[fd_sel]),
                 (wk[sd_sel], ws[sd_sel], wv[sd_sel]))
 
-    def _install(self, li: int, removed: list[SSTable],
-                 added: list[SSTable]) -> None:
-        rm = set(s.sid for s in removed)
-        kept = [s for s in self.levels[li] if s.sid not in rm]
-        for s in added:
-            s.level = li
-            s.tier = "FD" if li < self.cfg.n_fd_levels else "SD"
-        kept.extend(added)
-        if li == 0:
-            kept.sort(key=lambda s: -s.created_at)
-        else:
-            kept.sort(key=lambda s: s.min_key)
-        self.levels[li] = kept
+    def _install_edits(self, edits: list[tuple[int, list[SSTable],
+                                              list[SSTable]]]) -> None:
+        """Compaction install: publish ONE new Version with every edited
+        level rebuilt.  A compaction's input-removal and output-addition
+        (possibly across two levels) land atomically, so every published
+        Version is a consistent snapshot — no intermediate where a
+        record exists in neither the input nor the output level.  The
+        old Version's lists are never touched; pinned readers keep
+        their snapshot."""
+        levels = list(self.version.levels)
+        for li, removed, added in edits:
+            rm = set(s.sid for s in removed)
+            kept = [s for s in levels[li] if s.sid not in rm]
+            for s in added:
+                s.level = li
+                s.tier = "FD" if li < self.cfg.n_fd_levels else "SD"
+            kept.extend(added)
+            if li == 0:
+                kept.sort(key=lambda s: -s.created_at)
+            else:
+                kept.sort(key=lambda s: s.min_key)
+            levels[li] = kept
+        self._publish(levels)
 
     # ------------------------------------------------------------------
     # clock: deferred checkers & deferred PC inserts (test hook)
@@ -753,6 +897,15 @@ class TieredLSM:
         for _, immpc in self._checker_queue:
             self._run_checker(immpc)
         self._checker_queue = []
+
+    # ------------------------------------------------------------------
+    def __getstate__(self):
+        """Pickle without the GroupView cache (it can be large — up to
+        one winner row per record — and is rebuilt lazily on first scan;
+        benchmarks pickle loaded DBs via DB_CACHE)."""
+        state = self.__dict__.copy()
+        state["_view_cache"] = ViewCache()
+        return state
 
     # ------------------------------------------------------------------
     def reset_storage(self) -> None:

@@ -4,14 +4,20 @@ The *mutable promotion cache* (mPC) is an in-memory map absorbing
 records read from SD.  It sits between the last FD level and the first
 SD level in the read path.  When it reaches the SSTable target size it
 is frozen into an *immutable promotion cache* (immPC) together with a
-superversion snapshot; a background Checker later consults RALT, filters
-out records with newer versions (snapshot search + the `updated`-field
-protocol of Fig. 5), and bulk-flushes the hot survivors to L0.
+pinned ``Superversion`` (core/version.py: the published Version plus
+the immutable memtables at freeze time); a background Checker later
+consults RALT, filters out records with newer versions (frozen-snapshot
+search + the `updated`-field protocol of Fig. 5), and bulk-flushes the
+hot survivors to L0.  The Superversion reference is what makes the
+Checker's step-8 search sound: compactions installed after the freeze
+publish *new* Versions and never mutate the pinned one.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+
+from .version import Superversion
 
 _immpc_ids = itertools.count()
 
@@ -55,10 +61,13 @@ class MutablePromotionCache:
 
 @dataclasses.dataclass
 class ImmutablePromotionCache:
-    """Frozen record list + the Fig. 5 concurrency-control state."""
+    """Frozen record list + the Fig. 5 concurrency-control state.
+
+    ``sv`` pins the Superversion captured under the (simulated) DB mutex
+    at freeze time; the Checker searches only it and releases the pin
+    when done."""
     records: list[tuple[int, int, int]]          # (key, seq, vlen) sorted
-    snapshot: list[list]                         # per-level sstable lists (FD part)
-    snapshot_imm_memtables: list[dict]           # immutable memtables at snapshot
+    sv: Superversion                             # pinned frozen read view
     updated: set[int] = dataclasses.field(default_factory=set)
     iid: int = dataclasses.field(default_factory=lambda: next(_immpc_ids))
     key_set: frozenset = None

@@ -188,8 +188,10 @@ class RALT:
         self.buf_keys: list[int] = []
         self.buf_vlens: list[int] = []
         self.buf_ticks: list[int] = []
-        # batch inserts (range scans) land as whole numpy chunks
-        self.buf_chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+        # batch inserts (range scans) land as whole numpy chunks of
+        # (keys, vlens, ticks, score_weights)
+        self.buf_chunks: list[tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]] = []
         self._buf_chunk_len = 0
         self.runs: list[RaltRun] = []     # newest first
         self.tick = 0
@@ -230,23 +232,28 @@ class RALT:
 
     def record_range_access(self, lo: int, hi: int, keys: np.ndarray,
                             vlens: np.ndarray) -> None:
-        """Vectorized batch analogue of `record_access` for range scans.
+        """Vectorized batch analogue of `record_access` for range scans,
+        with scan-length-aware scoring.
 
         A scan over [lo, hi] served `keys` (with HotRAP value sizes
         `vlens`); all of them enter the scoring pipeline at the current
         tick in one numpy chunk — no per-key Python loop — so scans over
         SD-resident hot ranges feed the same promotion machinery as
-        repeated point lookups.  Clocks advance by the total scanned
-        HotRAP bytes.  `lo`/`hi` fix the interface for range-level
-        (REMIX-style) scoring — today's per-key scoring does not consume
-        them (see ROADMAP open items).
+        repeated point lookups.  Each record's initial score is clipped
+        to 1/len(keys) (a point get contributes 1), so one scan adds ~one
+        get's worth of total score spread over its range: a single long
+        cold scan can no longer flood the hot set and evict the point-get
+        working set, while a *repeatedly* scanned range still accumulates
+        score linearly in repetitions.  Clocks advance by the total
+        scanned HotRAP bytes.
         """
         if len(keys) == 0:
             return
         keys = np.ascontiguousarray(keys, dtype=np.uint64)
         vlens = np.ascontiguousarray(vlens, dtype=np.uint32)
         ticks = np.full(len(keys), self.tick, dtype=np.int64)
-        self.buf_chunks.append((keys, vlens, ticks))
+        weights = np.full(len(keys), min(1.0, 1.0 / len(keys)))
+        self.buf_chunks.append((keys, vlens, ticks, weights))
         self._buf_chunk_len += len(keys)
         nbytes = int(vlens.astype(np.int64).sum()) + KEY_BYTES * len(keys)
         self._advance_clocks(nbytes)
@@ -307,30 +314,34 @@ class RALT:
 
     # ------------------------------------------------------------------
     def _drain_buffer_arrays(self):
-        """Concatenate + reset the point-access lists and scan chunks."""
-        parts_k, parts_v, parts_t = [], [], []
+        """Concatenate + reset the point-access lists and scan chunks.
+        Returns (keys, vlens, ticks, scores): point accesses score 1,
+        scan chunks carry their scan-length-clipped weights."""
+        parts_k, parts_v, parts_t, parts_w = [], [], [], []
         if self.buf_keys:
             parts_k.append(np.array(self.buf_keys, dtype=np.uint64))
             parts_v.append(np.array(self.buf_vlens, dtype=np.uint32))
             parts_t.append(np.array(self.buf_ticks, dtype=np.int64))
-        for k, v, t in self.buf_chunks:
+            parts_w.append(np.ones(len(parts_k[-1])))
+        for k, v, t, w in self.buf_chunks:
             parts_k.append(k)
             parts_v.append(v)
             parts_t.append(t)
+            parts_w.append(w)
         self.buf_keys, self.buf_vlens, self.buf_ticks = [], [], []
         self.buf_chunks, self._buf_chunk_len = [], 0
         if not parts_k:
             return (np.zeros(0, dtype=np.uint64),
                     np.zeros(0, dtype=np.uint32),
-                    np.zeros(0, dtype=np.int64))
+                    np.zeros(0, dtype=np.int64),
+                    np.zeros(0))
         return (np.concatenate(parts_k), np.concatenate(parts_v),
-                np.concatenate(parts_t))
+                np.concatenate(parts_t), np.concatenate(parts_w))
 
     def _flush_buffer(self) -> None:
         if not self.buf_keys and not self.buf_chunks:
             return
-        keys, vlens, ticks = self._drain_buffer_arrays()
-        scores = np.ones(len(keys))
+        keys, vlens, ticks, scores = self._drain_buffer_arrays()
         cnts = np.full(len(keys), self.cfg.delta_c)
         tags = np.zeros(len(keys), dtype=np.int8)
         epochs = np.full(len(keys), self.epoch, dtype=np.int64)
@@ -363,9 +374,9 @@ class RALT:
             self._flush_buffer_noio()
 
     def _flush_buffer_noio(self) -> None:
-        keys, vlens, ticks = self._drain_buffer_arrays()
+        keys, vlens, ticks, scores = self._drain_buffer_arrays()
         merged = _merge_records(
-            [(keys, vlens, ticks, np.ones(len(keys)),
+            [(keys, vlens, ticks, scores,
               np.full(len(keys), self.cfg.delta_c),
               np.zeros(len(keys), dtype=np.int8),
               np.full(len(keys), self.epoch, dtype=np.int64))],

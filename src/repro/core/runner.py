@@ -30,6 +30,8 @@ class RunResult:
     stats: dict
     storage: dict
     scan_fd_hit_rate: float = 0.0   # scanned records served off FD, final 10%
+    scan_merge_ops_per_record: float = 0.0  # cursor pulls + merge compares
+                                            # per scanned record (whole run)
 
     @property
     def p99(self) -> float:
@@ -147,7 +149,8 @@ def run_workload(db: TieredLSM, wl: Workload, name: str = "?",
         get_latencies=lat[window_reads] if collect_latency else lat,
         stats=dataclasses.asdict(db.stats),
         storage=db.storage.snapshot(),
-        scan_fd_hit_rate=scan_hit_final)
+        scan_fd_hit_rate=scan_hit_final,
+        scan_merge_ops_per_record=db.stats.scan_merge_ops_per_record)
 
 
 def bench_system(system: str, mix: str, dist, n_ops: int, value_len: int,

@@ -134,6 +134,14 @@ class SSTable:
         b = int(np.searchsorted(self.keys, np.uint64(hi), "right"))
         return a, b
 
+    def run_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                  np.ndarray]:
+        """(keys, seqs, vlens, block_of) — the columnar form consumed by
+        the REMIX GroupView builder (core/version.py).  Arrays are the
+        live internals: callers must treat them as immutable, like the
+        SSTable itself."""
+        return self.keys, self.seqs, self.vlens, self.block_of
+
     # record chunk converted per block_iter step: large enough to keep the
     # numpy->Python conversion vectorised, small enough that limit-bounded
     # scans never materialise a whole SSTable tail they won't consume

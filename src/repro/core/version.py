@@ -1,0 +1,238 @@
+"""Versioned read path: Superversion snapshots + REMIX-style views.
+
+``Version`` (RocksDB-style)
+---------------------------
+An immutable snapshot of the LSM's level lists.  ``TieredLSM`` publishes
+a *new* Version on every flush / compaction / promotion install and
+never mutates a published one, so a reader that captured a Version at
+the top of ``get``/``scan`` keeps seeing a consistent set of SSTables no
+matter how many installs happen underneath it.  Versions are refcounted:
+the engine holds one reference on the current Version, and every frozen
+immutable promotion cache pins the Version it snapshotted (via
+``Superversion``) until its Checker has run — the paper's §3.3/§3.4
+correctness argument ("the Checker searches the superversion it froze")
+becomes literal object identity instead of ad-hoc list copies.
+
+``Superversion``
+----------------
+Version + a snapshot of the immutable memtables — together the full
+read view the paper's Fig. 5 Checker consults in step 8.
+
+``GroupView`` (REMIX-style, Zhong et al. 2020)
+----------------------------------------------
+A persistent cross-run sorted view over one *level group* (the FD
+levels L0..n_fd-1, or the SD levels n_fd..).  Building it concatenates
+every run of the group, lexsorts by (key, run priority) and keeps the
+first occurrence per key: the arrays then map global sorted order
+directly to the winning record's (SSTable, block) cursor.  A range scan
+over the group is a single ``searchsorted`` slice — no per-record heap
+compares, no cursor draining of shadowed versions, and non-overlapping
+SSTables are never touched (fence-pointer pruning falls out of the
+global order).  Views are cached by *group signature* (the tuple of
+SSTable ids per run), so installs that do not change a group reuse the
+previous view untouched and a compaction invalidates exactly the group
+it rewrote — the build cost is amortised over every query between
+installs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .sstable import SSTable
+
+
+class Version:
+    """Immutable snapshot of the level lists.
+
+    ``levels`` is a list of per-level SSTable lists.  By contract nothing
+    mutates these lists after construction: installs build fresh lists
+    and publish a fresh Version.  ``refs`` counts pinners (the engine's
+    current pointer plus any frozen immPC superversions).
+    """
+
+    __slots__ = ("levels", "vid", "refs", "_fences", "_sigs")
+
+    def __init__(self, levels: list[list[SSTable]], vid: int):
+        self.levels = levels
+        self.vid = vid
+        self.refs = 0
+        self._fences: dict[int, tuple] = {}
+        self._sigs: dict[tuple, tuple] = {}
+
+    def ref(self) -> "Version":
+        self.refs += 1
+        return self
+
+    def unref(self) -> None:
+        self.refs -= 1
+
+    # ------------------------------------------------------------------
+    def level_fences(self, li: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(min_keys, max_keys, sids) arrays of one sorted level — the
+        fence pointers used for vectorized table location."""
+        f = self._fences.get(li)
+        if f is None:
+            lst = self.levels[li]
+            f = (np.array([s.min_key for s in lst], dtype=np.uint64),
+                 np.array([s.max_key for s in lst], dtype=np.uint64),
+                 np.array([s.sid for s in lst], dtype=np.int64))
+            self._fences[li] = f
+        return f
+
+    def sd_touched_many(self, keys: np.ndarray, winner_sids: np.ndarray,
+                        n_fd: int) -> list[list[int]]:
+        """Vectorized §3.3 touched-SSTable lists for a batch of SD-served
+        keys: for each key, every SD table ``get`` would have probed
+        top-down before (and including) the winner's table.  One
+        ``searchsorted`` per SD level replaces the per-key bisect loop.
+        """
+        nk = len(keys)
+        touched: list[list[int]] = [[] for _ in range(nk)]
+        if nk == 0:
+            return touched
+        keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        done = np.zeros(nk, dtype=bool)
+        for li in range(n_fd, len(self.levels)):
+            lst = self.levels[li]
+            if not lst:
+                continue
+            mins, maxs, sids = self.level_fences(li)
+            idx = np.searchsorted(maxs, keys, "left")
+            idxc = np.minimum(idx, len(lst) - 1)
+            hit = ~done & (idx < len(lst)) & (mins[idxc] <= keys)
+            for j in np.flatnonzero(hit):
+                sid = int(sids[idxc[j]])
+                touched[j].append(sid)
+                if sid == int(winner_sids[j]):
+                    done[j] = True
+        return touched
+
+    # ------------------------------------------------------------------
+    def group_runs(self, group: str, n_fd: int) -> list[list[SSTable]]:
+        """The runs of a level group in probe-priority order (newest
+        first).  Each L0 table is its own run (they overlap); deeper
+        levels are single sorted runs."""
+        if group == "FD":
+            runs = [[s] for s in self.levels[0]]
+            runs += [self.levels[li] for li in range(1, min(n_fd, len(self.levels)))
+                     if self.levels[li]]
+            return runs
+        return [self.levels[li] for li in range(n_fd, len(self.levels))
+                if self.levels[li]]
+
+    def group_signature(self, group: str, n_fd: int) -> tuple:
+        """Tuple of per-run sid tuples — identifies the group's exact
+        composition.  Cached on the (immutable) Version so scan-heavy
+        workloads don't re-walk the table lists per query."""
+        sig = self._sigs.get((group, n_fd))
+        if sig is None:
+            sig = tuple(tuple(s.sid for s in run)
+                        for run in self.group_runs(group, n_fd))
+            self._sigs[(group, n_fd)] = sig
+        return sig
+
+
+@dataclasses.dataclass
+class Superversion:
+    """The full frozen read view an immPC Checker consults (Fig. 5):
+    the pinned Version plus the immutable memtables at freeze time."""
+    version: Version
+    imm_memtables: list[dict]
+    _released: bool = False
+
+    def release(self) -> None:
+        """Drop the Version pin (idempotent: every checker exit path may
+        call it without double-decrementing the refcount)."""
+        if not self._released:
+            self._released = True
+            self.version.unref()
+
+
+class GroupView:
+    """REMIX-style persistent cross-run view of one level group.
+
+    ``keys``/``seqs``/``vlens`` hold, in global key order, the *winning*
+    (highest-priority) version of every distinct key in the group —
+    tombstones included, since a tombstone winner shadows lower groups.
+    ``src``/``blks`` map each winner back to its (SSTable, data block)
+    cursor so scans charge exactly the blocks that hold winners.
+    ``n_source_records`` records how many run entries the build folded,
+    i.e. the cursor pulls a per-query k-way heap would have spent.
+    """
+
+    __slots__ = ("sig", "keys", "seqs", "vlens", "src", "blks", "ssts",
+                 "sids", "n_source_records")
+
+    def __init__(self, sig: tuple, runs: list[list[SSTable]]):
+        self.sig = sig
+        self.ssts: list[SSTable] = [s for run in runs for s in run]
+        self.sids = [s.sid for s in self.ssts]
+        parts_k, parts_s, parts_v, parts_b, parts_i, parts_p = \
+            [], [], [], [], [], []
+        si = 0
+        for pri, run in enumerate(runs):
+            for s in run:
+                keys, seqs, vlens, blocks = s.run_arrays()
+                parts_k.append(keys)
+                parts_s.append(seqs)
+                parts_v.append(vlens)
+                parts_b.append(blocks)
+                parts_i.append(np.full(s.n, si, dtype=np.int32))
+                parts_p.append(np.full(s.n, pri, dtype=np.int32))
+                si += 1
+        if not parts_k:
+            self.keys = np.zeros(0, dtype=np.uint64)
+            self.seqs = np.zeros(0, dtype=np.int64)
+            self.vlens = np.zeros(0, dtype=np.uint32)
+            self.src = np.zeros(0, dtype=np.int32)
+            self.blks = np.zeros(0, dtype=np.int32)
+            self.n_source_records = 0
+            return
+        keys = np.concatenate(parts_k)
+        pris = np.concatenate(parts_p)
+        self.n_source_records = len(keys)
+        order = np.lexsort((pris, keys))
+        keys = keys[order]
+        win = np.ones(len(keys), dtype=bool)
+        win[1:] = keys[1:] != keys[:-1]
+        sel = order[win]
+        self.keys = keys[win]
+        self.seqs = np.concatenate(parts_s)[sel]
+        self.vlens = np.concatenate(parts_v)[sel]
+        self.src = np.concatenate(parts_i)[sel]
+        self.blks = np.concatenate(parts_b)[sel]
+
+    @property
+    def n(self) -> int:
+        return len(self.keys)
+
+    def range_bounds(self, lo: int, hi: int) -> tuple[int, int]:
+        a = int(np.searchsorted(self.keys, np.uint64(lo), "left"))
+        b = int(np.searchsorted(self.keys, np.uint64(hi), "right"))
+        return a, b
+
+
+class ViewCache:
+    """Signature-keyed bounded cache of GroupViews.  Because SSTables
+    are immutable and sids unique, a signature fully determines the
+    view, so views survive Version installs that do not touch their
+    group and are shared by every Version with the same composition."""
+
+    def __init__(self, capacity: int = 6):
+        self.capacity = capacity
+        self._views: dict[tuple, GroupView] = {}
+        self.builds = 0
+
+    def get(self, sig: tuple, runs_thunk) -> GroupView:
+        view = self._views.pop(sig, None)
+        if view is None:
+            view = GroupView(sig, runs_thunk())
+            self.builds += 1
+            while len(self._views) >= self.capacity:
+                self._views.pop(next(iter(self._views)))
+        # (re)insert at the end: LRU order, so a stable SD view is not
+        # evicted by a stream of churning FD signatures
+        self._views[sig] = view
+        return view

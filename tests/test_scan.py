@@ -228,7 +228,10 @@ def test_scan_touched_list_covers_shallower_sd_levels():
             break
     assert probe is not None, "loaded DB has only one populated SD level"
     key, winner_sid, shallow_li = probe
-    touched = db._sd_touched_for_key(key, winner_sid)
+    touched = db.version.sd_touched_many(
+        np.array([key], dtype=np.uint64),
+        np.array([winner_sid], dtype=np.int64),
+        db.cfg.n_fd_levels)[0]
     assert touched[-1] == winner_sid
     shallow_sid = db.levels[shallow_li][
         db._bisect_level(db.levels[shallow_li], key)].sid

@@ -1,0 +1,268 @@
+"""Versioned read path (PR 3): Version lifecycle, REMIX GroupView
+equivalence + merge-cost acceptance, and range-level promotion.
+
+Version contract: every flush/compaction/promotion install *publishes*
+a fresh Version; published Versions are never mutated, so a pinned
+Version (a reader mid-flight, or the Superversion a frozen immPC hands
+its Checker) keeps a consistent snapshot across arbitrary concurrent
+installs.  The REMIX views must be semantically invisible (identical
+scan results to the per-query heap) while cutting the per-record merge
+work at least 2x — the acceptance bound of ISSUE 3.
+"""
+import dataclasses
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import LSMConfig, make_system
+from repro.core.runner import db_key_count, default_config, load_db
+
+KIB = 1024
+
+
+def tiny_cfg(**kw):
+    base = dict(fd_size=256 * KIB, sd_size=2 * 1024 * KIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+# ----------------------------------------------------------------------
+# Version lifecycle
+# ----------------------------------------------------------------------
+def test_installs_publish_fresh_versions():
+    db = make_system("rocksdb_tiered", tiny_cfg())
+    v0 = db.version
+    assert v0.refs == 1                       # the engine's own pin
+    for k in range(4000):
+        db.put(k, 200)
+    assert db.version is not v0
+    assert db.version.vid > v0.vid
+    assert db.stats.version_installs == db.version.vid
+    assert db.version.refs == 1 and v0.refs == 0
+
+
+def test_pinned_version_survives_concurrent_installs():
+    """A reader's pinned Version must stay byte-identical while flushes
+    and compactions install new Versions underneath it."""
+    db = make_system("rocksdb_tiered", tiny_cfg())
+    for k in range(3000):
+        db.put(k, 200)
+    db.flush_all()
+    v = db.version.ref()                      # the pinned reader snapshot
+    sig = [[s.sid for s in lvl] for lvl in v.levels]
+    # lookups against the pinned Version, answered from its own tables
+    hits_before = {k: db._search_levels(k, range(len(v.levels)), fg=False,
+                                        version=v) for k in (0, 1500, 2999)}
+    for k in range(3000):                     # churn: overwrite everything
+        db.put(k, 200)
+    db.flush_all()
+    assert db.version is not v
+    assert [[s.sid for s in lvl] for lvl in v.levels] == sig, \
+        "published Version was mutated by later installs"
+    for k, before in hits_before.items():
+        again = db._search_levels(k, range(len(v.levels)), fg=False,
+                                  version=v)
+        assert again[:2] == before[:2], "stale read through pinned Version"
+    v.unref()
+
+
+def test_frozen_immpc_pins_superversion_until_checker():
+    db = make_system("hotrap", tiny_cfg(checker_delay_ops=10_000))
+    rng = np.random.default_rng(0)
+    keys = np.arange(3000)
+    rng.shuffle(keys)
+    for k in keys:
+        db.put(int(k), 300)
+    db.flush_all()
+    # stage records into the mPC from SD, then freeze
+    for k in range(3000):
+        db.get(k)
+        if len(db.mpc) > 10:
+            break
+    db._freeze_mpc()
+    assert db.immpcs
+    immpc = db.immpcs[-1]
+    frozen = immpc.sv.version
+    assert frozen.refs >= 1                   # pinned by the superversion
+    vid_at_freeze = frozen.vid
+    for k in range(3000):                     # churn installs past the freeze
+        db.put(int(k), 300)
+    db.flush_all()                            # also drains the checker
+    assert db.version.vid > vid_at_freeze
+    assert immpc not in db.immpcs
+    assert frozen.refs == 0, "checker must release the superversion pin"
+
+
+def test_no_stale_reads_under_churn_with_views():
+    """Random stream with interleaved scans/gets vs a dict model — the
+    versioned+view read path must never serve a stale version."""
+    db = make_system("hotrap", tiny_cfg())
+    model = {}
+    rng = np.random.default_rng(9)
+    for _ in range(2500):
+        k = int(rng.integers(0, 500))
+        r = rng.random()
+        if r < 0.5:
+            model[k] = db.put(k, 150)
+        elif r < 0.6:
+            db.delete(k)
+            model[k] = None
+        elif r < 0.8:
+            got = db.get(k)
+            want = model.get(k)
+            assert (got is None) == (want is None)
+            if got is not None:
+                assert got[0] == want
+        else:
+            lo = int(rng.integers(0, 500))
+            for key, seq, _ in db.scan(lo, int(rng.integers(1, 30))):
+                assert seq == model[key]
+
+
+# ----------------------------------------------------------------------
+# REMIX GroupViews
+# ----------------------------------------------------------------------
+def _loaded_tiered_db():
+    cfg = default_config("tiny")
+    db = make_system("rocksdb_tiered", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    # cross-level duplicates + L0 runs, the shape that exercises the merge
+    rng = np.random.default_rng(1)
+    for k in rng.integers(0, nk, size=nk // 5):
+        db.put(int(k), 1000)
+    db._rotate_memtable()
+    db._flush_imm_memtables()
+    return db, nk
+
+
+def test_view_scan_identical_to_heap_scan():
+    db, nk = _loaded_tiered_db()
+    blob = pickle.dumps(db)
+    outs = {}
+    for remix in (False, True):
+        d = pickle.loads(blob)
+        d.cfg = dataclasses.replace(d.cfg, remix_views=remix)
+        rng = np.random.default_rng(5)
+        res = []
+        for _ in range(40):
+            res.append(d.scan(int(rng.integers(0, nk)), 30))
+        outs[remix] = res
+    assert outs[False] == outs[True]
+
+
+def test_view_reused_across_queries_and_rebuilt_on_install():
+    db, nk = _loaded_tiered_db()
+    db.stats.view_builds = 0
+    for i in range(20):
+        db.scan(i * 37, 20)
+    assert db.stats.view_builds <= 2, "views must be reused across queries"
+    before = db.stats.view_builds
+    for k in range(0, nk, 3):                 # force flush+compaction churn
+        db.put(int(k), 1000)
+    db.flush_all()
+    db.scan(0, 20)
+    assert db.stats.view_builds > before, "install must refresh the view"
+
+
+def test_remix_view_halves_merge_ops():
+    """ISSUE-3 acceptance: >= 2x fewer cursor-advance + heap-compare
+    operations per scanned record vs the per-query k-way heap."""
+    db, nk = _loaded_tiered_db()
+    blob = pickle.dumps(db)
+    ops = {}
+    for remix in (False, True):
+        d = pickle.loads(blob)
+        d.cfg = dataclasses.replace(d.cfg, remix_views=remix)
+        rng = np.random.default_rng(7)
+        for _ in range(100):
+            d.scan(int(rng.integers(0, nk)), 50)
+        ops[remix] = d.stats.scan_merge_ops_per_record
+        assert d.stats.scanned_records > 0
+    assert ops[False] >= 2.0 * ops[True], ops
+
+
+# ----------------------------------------------------------------------
+# range promotion
+# ----------------------------------------------------------------------
+def test_range_promotion_moves_scanned_range_to_fd_within_bound():
+    """ISSUE-3 acceptance: a repeatedly scanned SD range reaches FD
+    (whole-range promotion) within a bounded op count."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.reset_storage()
+    lo = nk // 3
+    scans = 0
+    while db.stats.range_promotions == 0 and scans < 100:
+        db.scan(lo, 50)
+        scans += 1
+    assert db.stats.range_promotions >= 1, \
+        f"no range promotion within {scans} scans"
+    assert db.stats.range_promoted_records >= 10
+    # once promoted, the range must be served without touching SD
+    sd_before = db.stats.scan_served_sd
+    got = db.scan(lo, 50)
+    assert len(got) == 50
+    assert db.stats.scan_served_sd - sd_before == 0, \
+        "promoted range still served from SD"
+
+
+def test_range_promotion_disabled_falls_back_to_per_record():
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg, range_promotion=False)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.reset_storage()
+    lo = nk // 3
+    for _ in range(60):
+        db.scan(lo, 50)
+    assert db.stats.range_promotions == 0
+    assert db.stats.scan_pc_inserts > 0, "per-record promotion still works"
+
+
+def test_long_cold_scan_does_not_dilute_hot_set():
+    """Scan-length-aware scoring: a point-get hot key must stay hot
+    after one giant cold scan logs 100x more records."""
+    from repro.core.ralt import RALT, RaltConfig
+    from repro.core.storage import StorageSim
+    MIB = 1024 * 1024
+    cfg = RaltConfig(fd_size=4 * MIB, hot_set_limit=2 * MIB,
+                     phys_limit=int(0.6 * MIB), autotune=False)
+    r = RALT(cfg, StorageSim())
+    for _ in range(30):                       # the point-get working set
+        for k in range(100, 120):
+            r.record_access(k, 1000)
+    cold = np.arange(10_000, 15_000, dtype=np.uint64)
+    r.record_range_access(10_000, 15_000, cold,
+                          np.full(len(cold), 1000, dtype=np.uint32))
+    r._flush_pending_buffer_arrays()
+
+    def scores_in(lo, hi):
+        parts = [run.scores[run.slice_range(lo, hi)] for run in r.runs]
+        return np.concatenate([p for p in parts if len(p)] or
+                              [np.zeros(0)])
+    # each cold record contributed only 1/5000 of a point access...
+    assert scores_in(10_000, 15_000).max() <= 1.0 / len(cold) + 1e-9
+    # ...while the merged point-get scores dwarf it (30 accesses each,
+    # modulo exponential tick decay)
+    assert scores_in(100, 120).max() >= 20.0
+    assert r.is_hot_many(np.arange(100, 120, dtype=np.uint64)).all()
+
+
+@pytest.mark.parametrize("system", ["hotrap", "mutant", "sas_cache"])
+def test_view_path_charges_scan_io(system):
+    """GroupView scans must still charge device I/O through the
+    baseline-interposable charge hook."""
+    db = make_system(system, tiny_cfg(block_cache_bytes=0))
+    for k in range(3000):
+        db.put(k, 300)
+    db.flush_all()
+    r0 = sum(db.storage.dev[t].read_bytes for t in ("FD", "SD"))
+    db.scan_range(0, 1500)
+    r1 = sum(db.storage.dev[t].read_bytes for t in ("FD", "SD"))
+    assert r1 > r0
