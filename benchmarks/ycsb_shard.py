@@ -1,0 +1,143 @@
+"""Shard-count scaling + cluster hot-budget arbitration (core/shards.py).
+
+Two questions, mirroring the paper's single-store evaluation lifted to
+cluster scope:
+
+* **Scaling** — hash-partitioned ``ShardedTieredLSM`` over N shared-
+  nothing shards, scrambled-zipfian YCSB mixes: does simulated
+  throughput scale with N while the aggregate FD hit rate stays at the
+  unsharded store's level?  Sharding splits the FD/SD/memtable budgets
+  1/N, so a hit-rate collapse here would mean the per-shard RALT /
+  promotion machinery stops tracking hotness at partition granularity.
+* **Arbitration** — range-partitioned shards under *unscrambled*
+  0.99-zipfian skew (hot ranks stay contiguous, so one shard owns
+  nearly all the heat): does the ``HotBudget`` arbiter (paper §3.7's
+  autotuner at cluster scope) move FD budget toward the hot shard?
+
+``--smoke`` (CI `shard-smoke` job) runs the quick profile and exits
+non-zero unless (a) the N=4 aggregate FD hit rate is within
+``HIT_TOLERANCE`` of N=1 — sharding must not degrade hotness tracking —
+and (b) the arbiter has moved at least ``MIN_BUDGET_SHIFT`` of FD
+budget toward the hot shard (hot share - fair share >= 0.10).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import ShardConfig
+from repro.core.baselines import make_sharded_system
+from repro.core.runner import db_key_count, load_db, run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import emit, make_cfg, n_ops
+
+SHARD_COUNTS = (1, 2, 4)
+HIT_TOLERANCE = 0.10       # N=4 FD hit rate may trail N=1 by at most this
+MIN_BUDGET_SHIFT = 0.10    # hot shard share - fair share (acceptance)
+SKEW_SYSTEMS = ("hotrap",)
+SCALING_SYSTEMS_FULL = ("hotrap", "rocksdb_tiered")
+
+
+def _loaded_cluster(system: str, cfg, scfg: ShardConfig, value_len: int,
+                    seed: int = 0):
+    """Fresh loaded cluster (no DB_CACHE: the cache key does not carry
+    shard shape, and clusters load fast at bench scale)."""
+    db = make_sharded_system(system, cfg, shard_cfg=scfg, seed=seed)
+    nk = db_key_count(cfg, value_len)
+    load_db(db, nk, value_len, seed)
+    db.reset_storage()
+    return db, nk
+
+
+def run_scaling(value_len: int = 1000, mix: str = "RW",
+                tag: str = "ycsb_shard", quick: bool = False) -> dict:
+    """Throughput / FD-hit-rate scaling over shard counts."""
+    cfg = make_cfg()
+    ops = max(n_ops() // 2, 5000)
+    systems = SKEW_SYSTEMS if quick else SCALING_SYSTEMS_FULL
+    results: dict = {}
+    for system in systems:
+        per_n = {}
+        for n in SHARD_COUNTS:
+            scfg = ShardConfig(n_shards=n, partitioning="hash")
+            db, nk = _loaded_cluster(system, cfg, scfg, value_len)
+            wl = ycsb(mix, KeyDist("zipfian", nk), ops, value_len, seed=11)
+            res = run_workload(db, wl, name=f"{system}-x{n}")
+            per_n[n] = res
+            speedup = res.throughput / max(per_n[1].throughput, 1e-9)
+            emit(f"{tag}/zipfian/{mix}/{system}/n{n}",
+                 1e6 / max(res.throughput, 1e-9),
+                 f"thr={res.throughput:.0f}ops/s;"
+                 f"fd_hit={res.fd_hit_rate:.3f};"
+                 f"speedup_vs_n1={speedup:.2f};"
+                 f"range_promo_frac={res.range_promo_frac};"
+                 f"get_view_hits={res.stats['get_view_hits']}")
+        results[system] = per_n
+    return results
+
+
+def run_skew(value_len: int = 1000, tag: str = "ycsb_shard",
+             quick: bool = False) -> tuple:
+    """HotBudget arbitration under contiguous (unscrambled) zipfian skew
+    on a range-partitioned cluster: nearly all heat lands on shard 0."""
+    cfg = make_cfg()
+    ops = max(n_ops() // 2, 5000)
+    nk = db_key_count(cfg, value_len)
+    out = {}
+    for system in SKEW_SYSTEMS:
+        scfg = ShardConfig(n_shards=4, partitioning="range", key_space=nk,
+                           rebalance_interval_ops=max(ops // 12, 250))
+        db, nk = _loaded_cluster(system, cfg, scfg, value_len)
+        dist = KeyDist("zipfian", nk, scramble=False)
+        wl = ycsb("RO", dist, ops, value_len, seed=11)
+        res = run_workload(db, wl, name=f"{system}-skew")
+        hb = db.hot_budget
+        shares = np.asarray(hb.shares)
+        hot = int(np.argmax(shares))
+        shift = float(shares[hot]) - 1.0 / scfg.n_shards
+        emit(f"{tag}/zipf_contig/RO/{system}/hot_budget",
+             1e6 / max(res.throughput, 1e-9),
+             f"thr={res.throughput:.0f}ops/s;fd_hit={res.fd_hit_rate:.3f};"
+             f"hot_shard={hot};hot_share={shares[hot]:.3f};"
+             f"budget_shift={shift:.3f};rebalances={hb.n_rebalances};"
+             f"shares={'/'.join(f'{s:.2f}' for s in shares)}")
+        out[system] = (res, shares, shift)
+    return out
+
+
+def smoke() -> None:
+    """CI tripwire (see .github/workflows/ci.yml shard-smoke)."""
+    scaling = run_scaling(quick=True)["hotrap"]
+    skew = run_skew(quick=True)["hotrap"]
+    failures = []
+    hit1 = scaling[1].fd_hit_rate
+    hit4 = scaling[4].fd_hit_rate
+    if hit4 < hit1 - HIT_TOLERANCE:
+        failures.append(f"N=4 FD hit rate {hit4:.3f} < N=1 {hit1:.3f} "
+                        f"- tolerance {HIT_TOLERANCE}")
+    _, shares, shift = skew
+    if shift < MIN_BUDGET_SHIFT:
+        failures.append(f"HotBudget shifted only {shift:.3f} of FD budget "
+                        f"toward the hot shard (< {MIN_BUDGET_SHIFT}); "
+                        f"shares={np.round(shares, 3).tolist()}")
+    if failures:
+        for f in failures:
+            print(f"SMOKE FAIL: {f}", flush=True)
+        raise SystemExit(1)
+    print(f"SMOKE OK: n4_hit={hit4:.3f} vs n1_hit={hit1:.3f} "
+          f"(tol {HIT_TOLERANCE}), budget_shift={shift:.3f} "
+          f">= {MIN_BUDGET_SHIFT}", flush=True)
+
+
+def main(quick: bool = False):
+    run_scaling(quick=quick)
+    run_skew(quick=quick)
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main(quick="--quick" in sys.argv)

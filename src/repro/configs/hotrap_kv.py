@@ -24,6 +24,10 @@ class HotrapKVConfig:
     value_len: int = 1000             # paper's 1 KiB records (24B keys)
     hot_set_init_frac: float = 0.50   # of FD (paper §4.1)
     ralt_phys_frac: float = 0.15      # of FD (paper §4.1)
+    # --- sharded serving (core/shards.py) ---
+    n_shards: int = 4                 # shared-nothing keyspace partitions
+    partitioning: str = "hash"        # "hash" | "range"
+    hot_budget: bool = True           # cluster-scope §3.7 FD arbiter
 
 
 CONFIG = HotrapKVConfig()
@@ -36,6 +40,28 @@ def lsm_config(c: HotrapKVConfig = CONFIG) -> LSMConfig:
         memtable_bytes=c.target_sstable_bytes,
         block_cache_bytes=max(c.fd_size // 64, 64 * 1024),
     )
+
+
+def shard_config(c: HotrapKVConfig = CONFIG,
+                 key_space: int | None = None):
+    """The cluster shape for `make_sharded_system` (core/shards.py).
+
+    Range partitioning needs boundaries that straddle the *actual* key
+    universe — a huge default would silently route every real key to
+    shard 0 — so when `key_space` is not given it is derived from the
+    store's loaded record count (`db_key_count`), with headroom for
+    workload inserts beyond the loaded range.  Hash partitioning
+    ignores key_space.
+    """
+    from ..core.runner import db_key_count
+    from ..core.shards import ShardConfig
+    if key_space is None:
+        if c.partitioning == "range":
+            key_space = 2 * db_key_count(lsm_config(c), c.value_len)
+        else:
+            key_space = 2 ** 62
+    return ShardConfig(n_shards=c.n_shards, partitioning=c.partitioning,
+                       key_space=key_space, hot_budget=c.hot_budget)
 
 
 def tiering_defaults(fast_slots: int) -> dict:

@@ -7,10 +7,17 @@ Public API:
                                 GroupViews (core/version.py)
     RALT, RaltConfig          — the hotness tracker (core/ralt.py)
     make_system, SYSTEMS      — paper baselines (core/baselines.py)
+    make_sharded_system       — N-shard shared-nothing construction
+    ShardConfig, ShardedTieredLSM, HotBudget
+                              — keyspace-partitioned cluster with the
+                                cross-shard FD-budget arbiter
+                                (core/shards.py)
     StorageSim                — simulated tiered devices (core/storage.py)
 """
 from .lsm import LSMConfig, TieredLSM          # noqa: F401
 from .version import GroupView, Superversion, Version  # noqa: F401
 from .ralt import RALT, RaltConfig             # noqa: F401
-from .baselines import SYSTEMS, make_system    # noqa: F401
+from .baselines import (SYSTEMS, make_sharded_system,  # noqa: F401
+                        make_system)
+from .shards import HotBudget, ShardConfig, ShardedTieredLSM  # noqa: F401
 from .storage import StorageSim                # noqa: F401

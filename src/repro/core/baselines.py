@@ -90,8 +90,8 @@ class Mutant(TieredLSM):
         self.temps[sst.sid] = self.temps.get(sst.sid, 0.0) + 1.0
         super()._scan_charge_block(sst, blk)
 
-    def _scan(self, lo, hi, limit):
-        out = super()._scan(lo, hi, limit)
+    def _scan(self, lo, hi, limit, tags=None):
+        out = super()._scan(lo, hi, limit, tags=tags)
         # a scan is one record-access per returned record, not one op —
         # otherwise scan-heavy mixes never reach the migration interval
         self._count_accesses(max(1, len(out)))
@@ -241,8 +241,8 @@ class PrismDB(TieredLSM):
         self._count_reads(1)
         return out
 
-    def _scan(self, lo, hi, limit):
-        out = super()._scan(lo, hi, limit)
+    def _scan(self, lo, hi, limit, tags=None):
+        out = super()._scan(lo, hi, limit, tags=tags)
         for k, _, _ in out:           # scanned records set clock bits too
             self.clock[k] = True
         # record-granular accounting: without it scan-heavy mixes set
@@ -322,3 +322,22 @@ def make_system(name: str, cfg: LSMConfig | None = None,
     if name == "prismdb":
         return PrismDB(cfg, storage=storage, seed=seed)
     raise ValueError(f"unknown system {name!r} (choose from {SYSTEMS})")
+
+
+def make_sharded_system(name: str, cfg: LSMConfig | None = None,
+                        shard_cfg=None, seed: int = 0, **overrides):
+    """Sharded construction for every compared system: N shared-nothing
+    shards of `name`'s engine behind the core/shards.py router.  `cfg`
+    is the *cluster-total* resource budget; each shard gets a 1/N slice
+    (see shards.shard_lsm_config).  `shard_cfg` is a ShardConfig
+    (defaults: 4 hash-partitioned shards with the HotBudget arbiter on).
+    """
+    from .shards import ShardConfig, ShardedTieredLSM
+    cfg = cfg or LSMConfig()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    scfg = shard_cfg or ShardConfig()
+    return ShardedTieredLSM(
+        scfg, cfg,
+        factory=lambda sub_cfg, s: make_system(name, sub_cfg, seed=s),
+        seed=seed)

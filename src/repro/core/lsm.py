@@ -34,7 +34,15 @@ On top of each Version, scans use REMIX-style cross-run ``GroupView``s
 per-query merge is two ordered views against the memtables/mPC instead
 of a per-level cursor heap; see core/scan.py for the merge and the
 merge-cost accounting, and ``_record_scan_hotness`` for scan-side
-hotness including whole-range promotion.
+hotness including whole-range promotion.  Point gets ride the same
+views: when a group's view is already materialized, ``_probe_group``
+resolves the group by one binary search instead of the per-level probe
+walk (never building a view a scan has not paid for), tallying the
+saved probes in ``Stats.get_probes_saved``.
+
+For scale-out beyond this single-mutator engine, core/shards.py wraps N
+independent ``TieredLSM`` instances into a shared-nothing
+``ShardedTieredLSM`` with a cluster-scope FD-budget arbiter.
 
 Read semantics are faithful top-down-first-match (NOT max-seq), so the
 shielding hazards the paper's concurrency control addresses are real
@@ -56,6 +64,10 @@ from .storage import BlockCache, StorageSim
 from .version import GroupView, Superversion, Version, ViewCache
 
 MIB = 1024 * 1024
+
+# point-get fast path: "no materialized view for this group" sentinel
+# (distinct from None, which means "key definitively absent from group")
+_VIEW_MISS = object()
 
 
 @dataclasses.dataclass
@@ -86,6 +98,10 @@ class LSMConfig:
     range_promotion: bool = True         # whole-range promotion on hot scans
     range_promo_frac: float = 0.5        # range is hot when RALT hot bytes
                                          # >= frac * scanned HotRAP bytes
+    # --- point-get fast path (PR 4) ---
+    point_view_gets: bool = True         # serve gets from an *already
+                                         # materialized* GroupView via one
+                                         # binary search (never builds one)
 
     def level_caps(self) -> list[float]:
         """Byte capacity per level (L0 handled by count, entry is inf)."""
@@ -139,6 +155,8 @@ class Stats:
     scan_cursor_pulls: int = 0           # records drawn from scan cursors
     scan_merge_compares: int = 0         # modelled heap/2-way compares
     view_builds: int = 0                 # GroupView constructions
+    get_view_hits: int = 0               # gets served off a cached view
+    get_probes_saved: int = 0            # per-level probes those replaced
     version_installs: int = 0            # Versions published
     range_promotions: int = 0            # whole-range promotion batches
     range_promoted_records: int = 0      # records in those batches
@@ -200,6 +218,14 @@ class TieredLSM:
                 # still exercise flush/hotness paths
                 buffer_bytes=min(64 * 1024, max(4096, cfg.fd_size // 64)))
             self.ralt = RALT(rcfg, self.storage)
+        # point-get view fast path: only safe when the per-level search
+        # is not interposed by a baseline (Mutant temperatures, SAS-Cache
+        # secondary cache hook _search_levels; a view hit would skip
+        # them).  The cfg flags are re-read per get so ablations that
+        # flip remix_views on a live store behave consistently.
+        self.point_counters = MergeCounters()
+        self._point_view_ok = (
+            type(self)._search_levels is TieredLSM._search_levels)
         # test hook: when set, PC insertions are deferred by this many ops
         self.defer_pc_inserts: int = 0
         self._deferred_pc: list[tuple[int, int, int, int, list[int]]] = []
@@ -285,9 +311,8 @@ class TieredLSM:
             if hit is not None:
                 self.stats.served_mem += 1
                 return self._finish_get(key, hit, tier=None)
-        # 2. FD levels
-        hit = self._search_levels(key, range(0, self.cfg.n_fd_levels),
-                                  fg=True, version=v)
+        # 2. FD levels (via cached GroupView when one is materialized)
+        hit = self._probe_group(key, "FD", v)
         if hit is not None:
             self.stats.served_fd += 1
             return self._finish_get(key, hit[:2], tier="FD")
@@ -298,9 +323,7 @@ class TieredLSM:
             return self._finish_get(key, pc_hit, tier="PC")
         # 4. SD levels (recording touched SSTables for the §3.3 check)
         touched: list[int] = []
-        hit = self._search_levels(key, range(self.cfg.n_fd_levels,
-                                             len(v.levels)),
-                                  fg=True, touched=touched, version=v)
+        hit = self._probe_group(key, "SD", v, touched=touched)
         if hit is not None:
             self.stats.served_sd += 1
             seq, vlen, _ = hit
@@ -324,8 +347,17 @@ class TieredLSM:
         """All live records with lo <= key <= hi (same semantics as scan)."""
         return self._scan(lo, hi, None)
 
-    def _scan(self, lo: int, hi: int, limit: int | None
-              ) -> list[tuple[int, int, int]]:
+    def scan_tagged(self, lo: int, n: int,
+                    hi: int | None = None) -> list[tuple[int, int, int, str]]:
+        """Router API (core/shards.py): `scan`/`scan_range` plus each
+        record's serving tier ("mem"/"FD"/"PC"/"SD"), so a fan-out merge
+        can correct aggregate stats for records it discards."""
+        tags: list[str] = []
+        out = self._scan(lo, MAX_KEY if hi is None else hi, n, tags=tags)
+        return [(k, s, v, t) for (k, s, v), t in zip(out, tags)]
+
+    def _scan(self, lo: int, hi: int, limit: int | None,
+              tags: list | None = None) -> list[tuple[int, int, int]]:
         self.stats.scans += 1
         self._tick()
         if limit is not None and limit <= 0:
@@ -341,6 +373,8 @@ class TieredLSM:
                 continue
             out.append((key, seq, vlen))
             tier = smap.classify(pri)
+            if tags is not None:
+                tags.append(tier)
             if tier == "mem":
                 st.scan_served_mem += 1
             elif tier == "FD":
@@ -442,6 +476,64 @@ class TieredLSM:
     @staticmethod
     def _vbytes(vlen: int) -> int:
         return 0 if vlen == TOMBSTONE_VLEN else vlen
+
+    def _probe_group(self, key: int, group: str, version: Version,
+                     touched: list[int] | None = None):
+        """Search one level group ("FD" or "SD") for `key`.
+
+        Fast path (ROADMAP "point-get acceleration off the GroupViews"):
+        when the group's view is *already materialized* in the cache —
+        a scan built it since the last composition change — the winner
+        is one binary search over the view arrays instead of a top-down
+        per-level probe walk; saved probes are tallied in
+        ``point_counters`` / ``Stats.get_probes_saved``.  Never builds a
+        view (point-only workloads pay zero build cost), and falls back
+        to ``_search_levels`` on a cache miss.  Returns
+        (seq, vlen, sid) or None.
+        """
+        if (self._point_view_ok and self.cfg.remix_views
+                and self.cfg.point_view_gets):
+            res = self._view_point_get(key, group, version, touched)
+            if res is not _VIEW_MISS:
+                return res
+        n_fd = self.cfg.n_fd_levels
+        rng = (range(0, n_fd) if group == "FD"
+               else range(n_fd, len(version.levels)))
+        return self._search_levels(key, rng, fg=True, touched=touched,
+                                   version=version)
+
+    def _view_point_get(self, key: int, group: str, version: Version,
+                        touched: list[int] | None = None):
+        """One binary search over a cached GroupView; ``_VIEW_MISS``
+        when the view is not materialized.  The winner's data block is
+        charged exactly like the probe walk's winning probe; an absent
+        key charges nothing (the view is authoritative for its group —
+        no bloom false positives).  SD hits fill `touched` with the
+        §3.3 probed-above-winner table list via the pinned Version."""
+        sig = (group,) + version.group_signature(group, self.cfg.n_fd_levels)
+        view = self._view_cache.peek(sig)
+        if view is None:
+            return _VIEW_MISS
+        found = view.point_find(key)
+        saved = view.probes_replaced(key, found[2] if found else None)
+        c = self.point_counters
+        c.view_gets += 1
+        c.probes_saved += saved
+        self.stats.get_view_hits += 1
+        self.stats.get_probes_saved += saved
+        if found is None:
+            return None
+        seq, vlen, si, blk = found
+        sst = view.ssts[si]
+        if not self.block_cache.access((sst.sid, blk)):
+            self.storage.rand_read(sst.tier, BLOCK_BYTES, fg=True,
+                                   component="get")
+        if touched is not None and group == "SD":
+            touched.extend(version.sd_touched_many(
+                np.array([key], dtype=np.uint64),
+                np.array([sst.sid], dtype=np.int64),
+                self.cfg.n_fd_levels)[0])
+        return seq, vlen, sst.sid
 
     def _finish_get(self, key: int, hit: tuple[int, int], tier):
         seq, vlen = hit

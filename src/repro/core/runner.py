@@ -32,6 +32,11 @@ class RunResult:
     scan_fd_hit_rate: float = 0.0   # scanned records served off FD, final 10%
     scan_merge_ops_per_record: float = 0.0  # cursor pulls + merge compares
                                             # per scanned record (whole run)
+    # --- effective admission / cluster settings (PR 4) ---
+    range_promo_frac: float = 0.0   # the run's whole-range admission knob
+    n_shards: int = 1
+    shard_budget: dict | None = None  # HotBudget knobs + final shares
+                                      # (None when unsharded / arbiter off)
 
     @property
     def p99(self) -> float:
@@ -79,53 +84,103 @@ def load_db(db: TieredLSM, n_keys: int, value_len: int, seed: int = 0
     db.flush_all()
 
 
-def run_workload(db: TieredLSM, wl: Workload, name: str = "?",
+def _db_storages(db) -> list:
+    """The DB's StorageSim slices: one for a plain TieredLSM, one per
+    shard for a ShardedTieredLSM (shared-nothing accounting)."""
+    sts = getattr(db, "storages", None)
+    return list(sts) if sts else [db.storage]
+
+
+def _merged_storage_snapshot(sts: list) -> dict:
+    """Per-tier/per-component sums across shard storages, with the
+    per-shard snapshots preserved under "shards"."""
+    if len(sts) == 1:
+        return sts[0].snapshot()
+    snaps = [st.snapshot() for st in sts]
+    agg: dict = {}
+    for t in ("FD", "SD"):
+        agg[t] = {k: sum(s[t][k] for s in snaps) for k in snaps[0][t]}
+    comps: dict = {}
+    for s in snaps:
+        for cname, c in s["components"].items():
+            tgt = comps.setdefault(
+                cname, {"read_bytes": 0, "write_bytes": 0, "time": 0.0})
+            for k in c:
+                tgt[k] += c[k]
+    agg["components"] = comps
+    agg["shards"] = snaps
+    return agg
+
+
+def run_workload(db, wl: Workload, name: str = "?",
                  collect_latency: bool = True) -> RunResult:
+    """Drive one workload through a TieredLSM *or* a ShardedTieredLSM.
+
+    Sharded runs are shared-nothing: every shard's devices serve in
+    parallel, so the completion window is the *busiest single device
+    across all shards* — N-way sharding of a balanced workload shrinks
+    the window toward 1/N (throughput scales), while a skewed workload
+    leaves one hot shard gating the cluster.  Stats are the field-wise
+    aggregate over shards (ShardedTieredLSM.stats).
+    """
     fresh_value = wl.value_len
     n = len(wl.ops)
+    sts = _db_storages(db)
+    tiers = ("FD", "SD")
     fd_lat = np.zeros(n if collect_latency else 0)
     sd_lat = np.zeros(n if collect_latency else 0)
     t10_start_ops = int(n * 0.9)
-    busy90 = {t: 0.0 for t in ("FD", "SD")}
+    busy90 = {(si, t): 0.0 for si in range(len(sts)) for t in tiers}
     gets90 = hits90 = scanned90 = scan_hits90 = 0
     for j in range(n):
         if j == t10_start_ops:
-            busy90 = {t: db.storage.dev[t].busy for t in ("FD", "SD")}
-            gets90 = db.stats.gets
-            hits90 = (db.stats.served_mem + db.stats.served_fd
-                      + db.stats.served_pc)
-            scanned90 = db.stats.scanned_records
-            scan_hits90 = (db.stats.scan_served_mem + db.stats.scan_served_fd
-                           + db.stats.scan_served_pc)
+            busy90 = {(si, t): st.dev[t].busy
+                      for si, st in enumerate(sts) for t in tiers}
+            s = db.stats
+            gets90 = s.gets
+            hits90 = s.served_mem + s.served_fd + s.served_pc
+            scanned90 = s.scanned_records
+            scan_hits90 = (s.scan_served_mem + s.scan_served_fd
+                           + s.scan_served_pc)
         op, key = int(wl.ops[j]), int(wl.keys[j])
         if op == OP_READ or op == OP_SCAN:
             if collect_latency:
-                f0 = db.storage.dev["FD"].fg_time
-                s0 = db.storage.dev["SD"].fg_time
+                f0 = [st.dev["FD"].fg_time for st in sts]
+                s0 = [st.dev["SD"].fg_time for st in sts]
             if op == OP_READ:
                 db.get(key)
             else:
                 db.scan(key, int(wl.scan_lens[j]))
             if collect_latency:
-                fd_lat[j] = db.storage.dev["FD"].fg_time - f0
-                sd_lat[j] = db.storage.dev["SD"].fg_time - s0
+                # shared-nothing: a fan-out op's shards serve in
+                # parallel, so its latency is the slowest shard's delta
+                # (for a point get only one shard moves — max == delta)
+                fd_lat[j] = max(st.dev["FD"].fg_time - f0[si]
+                                for si, st in enumerate(sts))
+                sd_lat[j] = max(st.dev["SD"].fg_time - s0[si]
+                                for si, st in enumerate(sts))
         elif op == OP_INSERT:
             db.put(key, fresh_value)
         else:
             db.put(key, fresh_value)
-    total = db.storage.sim_time
+    total = max(st.sim_time for st in sts)
     # Throughput = ops in window / bottleneck-device work in the window
-    # (devices serve concurrently; the busiest one gates completion).
-    window = max(max(db.storage.dev[t].busy - busy90[t]
-                     for t in ("FD", "SD")), 1e-12)
+    # (all devices of all shards serve concurrently; the busiest one
+    # gates completion).
+    window = max(max(sts[si].dev[t].busy - busy90[(si, t)]
+                     for si in range(len(sts)) for t in tiers), 1e-12)
     thr = (n - t10_start_ops) / window
     # Tail latency (paper Fig. 8 metric: final 10% of the run): service
     # time inflated by steady-state device utilisation (M/M/1-style
     # 1/(1-rho)) — a saturated device queues, an idle one does not.
+    # Sharded: the hottest shard's per-tier utilisation is the queueing
+    # model (requests route to one shard; the loaded one queues).
     if collect_latency:
         lat = np.zeros(n - t10_start_ops)
         for t, arr in (("FD", fd_lat), ("SD", sd_lat)):
-            rho = min((db.storage.dev[t].busy - busy90[t]) / window, 0.95)
+            busy_t = max(sts[si].dev[t].busy - busy90[(si, t)]
+                         for si in range(len(sts)))
+            rho = min(busy_t / window, 0.95)
             lat += arr[t10_start_ops:] / (1.0 - rho)
         window_reads = ((wl.ops[t10_start_ops:] == OP_READ)
                         | (wl.ops[t10_start_ops:] == OP_SCAN))
@@ -133,24 +188,32 @@ def run_workload(db: TieredLSM, wl: Workload, name: str = "?",
         lat = fd_lat
         window_reads = np.zeros(0, dtype=bool)
     # paper metric: FD hit rate over the *final 10%* of the run phase
-    gets_w = db.stats.gets - gets90
-    hits_w = (db.stats.served_mem + db.stats.served_fd
-              + db.stats.served_pc) - hits90
-    hit_final = hits_w / gets_w if gets_w else db.stats.fd_hit_rate
-    scanned_w = db.stats.scanned_records - scanned90
-    scan_hits_w = (db.stats.scan_served_mem + db.stats.scan_served_fd
-                   + db.stats.scan_served_pc) - scan_hits90
+    stats = db.stats
+    gets_w = stats.gets - gets90
+    hits_w = (stats.served_mem + stats.served_fd
+              + stats.served_pc) - hits90
+    hit_final = hits_w / gets_w if gets_w else stats.fd_hit_rate
+    scanned_w = stats.scanned_records - scanned90
+    scan_hits_w = (stats.scan_served_mem + stats.scan_served_fd
+                   + stats.scan_served_pc) - scan_hits90
     scan_hit_final = (scan_hits_w / scanned_w if scanned_w
-                      else db.stats.scan_fd_hit_rate)
+                      else stats.scan_fd_hit_rate)
+    # effective admission / cluster settings (knob surfacing, PR 4):
+    # sharded DBs report the per-shard config and the HotBudget state
+    shard_knobs = db.shard_knobs() if hasattr(db, "shard_knobs") else None
+    eff_cfg = getattr(db, "shard_cfg", None) or db.cfg
     return RunResult(
         system=name, n_ops=n, sim_seconds=total,
         tail_window_seconds=window, throughput=thr,
         fd_hit_rate=hit_final,
         get_latencies=lat[window_reads] if collect_latency else lat,
-        stats=dataclasses.asdict(db.stats),
-        storage=db.storage.snapshot(),
+        stats=dataclasses.asdict(stats),
+        storage=_merged_storage_snapshot(sts),
         scan_fd_hit_rate=scan_hit_final,
-        scan_merge_ops_per_record=db.stats.scan_merge_ops_per_record)
+        scan_merge_ops_per_record=stats.scan_merge_ops_per_record,
+        range_promo_frac=float(getattr(eff_cfg, "range_promo_frac", 0.0)),
+        n_shards=getattr(getattr(db, "scfg", None), "n_shards", 1),
+        shard_budget=shard_knobs)
 
 
 def bench_system(system: str, mix: str, dist, n_ops: int, value_len: int,

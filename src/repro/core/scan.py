@@ -74,13 +74,18 @@ TIER_MEM, TIER_FD, TIER_PC, TIER_SD = "mem", "FD", "PC", "SD"
 
 
 class MergeCounters:
-    """Cursor-advance + heap-compare tallies for one scan."""
+    """Merge-cost tallies: cursor pulls + heap compares for scans, and
+    the point-get view fast path's usage (``view_gets``: gets served by
+    one binary search over a cached GroupView; ``probes_saved``: the
+    per-level table probes that search replaced)."""
 
-    __slots__ = ("pulls", "compares")
+    __slots__ = ("pulls", "compares", "view_gets", "probes_saved")
 
     def __init__(self):
         self.pulls = 0
         self.compares = 0
+        self.view_gets = 0
+        self.probes_saved = 0
 
 
 def _mem_source(table: dict, lo: int, hi: int):

@@ -1,0 +1,435 @@
+"""Shared-nothing sharded engine: keyspace-partitioned ``TieredLSM``
+shards, a batched router, and a cluster-scope hot-budget arbiter.
+
+Why sharding, and why here
+--------------------------
+PR 3 made every read pin an immutable ``Version``, which removed the
+last piece of cross-request mutable state from the read path; the
+single-mutator engine is now safe to replicate.  ``ShardedTieredLSM``
+takes the next step the ROADMAP calls "concurrency beyond the
+single-mutator simulation": it hash- or range-partitions the keyspace
+across N fully independent ``TieredLSM`` shards.  *Shared-nothing*
+means exactly that — each shard owns its own memtables, Version chain,
+RALT, promotion caches, and ``StorageSim`` slice (1/N of the FD and SD
+byte budgets), and no object is ever shared between shards, so each
+shard could run on its own core/machine with no locks.  The only
+cluster-wide state is the router's monotonic sequence counter (so the
+sharded store assigns the same seq a single engine would — results are
+byte-identical to an unsharded oracle) and the ``HotBudget`` arbiter
+below.
+
+The router
+----------
+``get``/``put``/``delete`` route by key.  ``multi_get`` buckets a whole
+key batch in one vectorized pass — ``np.searchsorted`` over the shard
+boundary array for range partitioning, one multiply-shift hash for hash
+partitioning — then drains each shard's bucket together, the shape a
+batched RPC fan-out would take.  ``scan``/``scan_range`` fan out to the
+(overlapping) shards and merge the per-shard results; per-shard scans
+reuse the whole PR-3 view-source machinery (each shard serves its slice
+from its cached ``GroupView``s), and because the partitions are
+disjoint the cross-shard merge is a trivial k-way interleave with no
+version arbitration.
+
+``HotBudget``: the paper's §3.7 autotuner at cluster scope
+----------------------------------------------------------
+HotRAP §3.7 (Alg. 1) tunes *one* store's hot-set threshold so the hot
+set tracks the fast-disk budget.  At cluster scale the same problem
+reappears one level up: a skewed workload concentrates hot bytes on few
+shards, so a static 1/N fast-disk split starves exactly the shards
+whose promotion pathways need headroom, while cold shards idle on
+reserved FD.  ``HotBudget`` is the cross-shard analogue of Alg. 1: it
+periodically reads each shard's demand signal — ``RALT.hot_set_bytes``
+(the per-shard §3.2 hot-set size estimate) when the shard runs HotRAP,
+FD occupancy otherwise — and reassigns FD capacity proportionally
+(EMA-smoothed, clamped to [min_share, max_share] x fair-share).  A
+shard's award is applied the same way Alg. 1 applies its limits inside
+one store: the last-FD-level caps scale (more room before retention
+must spill to SD), and the shard's RALT gets a proportionally scaled
+``fd_size`` / hot-set / physical-size budget, so the per-shard §3.7
+autotuner keeps running *within* the cluster-assigned envelope.
+Relative scaling preserves whatever the per-shard autotuner has learned
+between rebalances instead of resetting it.
+
+Equivalence contract (tests/test_shards.py)
+-------------------------------------------
+For any N and either partitioning, ``put``/``delete`` return the same
+seq and ``get``/``scan``/``scan_range`` return byte-identical results
+to a single unsharded ``TieredLSM`` fed the same op stream.  Placement
+(which tier a record lives on, what HotBudget awards) never leaks into
+visibility — only into the simulated I/O accounting.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import heapq
+
+import numpy as np
+
+from .lsm import LSMConfig, Stats, TieredLSM
+
+_HASH_MULT = np.uint64(0x9E3779B97F4A7C15)
+
+
+@dataclasses.dataclass
+class ShardConfig:
+    """Cluster shape + hot-budget arbiter knobs."""
+    n_shards: int = 4
+    partitioning: str = "hash"           # "hash" | "range"
+    key_space: int = 2 ** 62             # range partitioning: keys are
+                                         # split evenly over [0, key_space)
+    # --- HotBudget arbiter (paper §3.7 lifted to cluster scope) ---
+    hot_budget: bool = True
+    rebalance_interval_ops: int = 4096   # router ops between rebalances
+    min_share: float = 0.5               # x fair share (1/N): floor
+    max_share: float = 3.0               # x fair share (1/N): ceiling
+    ema: float = 0.5                     # smoothing toward target shares
+    # --- per-shard resource split floors ---
+    memtable_floor: int = 64 * 1024
+    block_cache_floor: int = 16 * 1024
+
+    def __post_init__(self):
+        if self.partitioning not in ("hash", "range"):
+            raise ValueError(f"unknown partitioning {self.partitioning!r}")
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+
+
+def shard_lsm_config(cfg: LSMConfig, scfg: ShardConfig) -> LSMConfig:
+    """Split one store's resource budget into a per-shard LSMConfig.
+
+    FD/SD bytes, memtable, and block cache divide by N (shared-nothing:
+    the cluster's total hardware equals the unsharded store's) with
+    small floors so tiny test configs stay runnable; structural knobs
+    (size ratio, SSTable target, level count, HotRAP flags) are
+    inherited unchanged.  The RALT budgets are fractions of fd_size and
+    scale automatically.
+    """
+    n = scfg.n_shards
+    if n == 1:
+        return cfg
+    return dataclasses.replace(
+        cfg,
+        fd_size=max(cfg.fd_size // n, 2 * cfg.target_sstable_bytes),
+        sd_size=max(cfg.sd_size // n, 4 * cfg.target_sstable_bytes),
+        memtable_bytes=max(cfg.memtable_bytes // n, scfg.memtable_floor),
+        block_cache_bytes=max(cfg.block_cache_bytes // n,
+                              scfg.block_cache_floor),
+    )
+
+
+class HotBudget:
+    """Cluster-scope FD-budget arbiter (paper §3.7, Alg. 1 analogue).
+
+    Tracks a share vector over shards (sum == 1, initialised to fair
+    share).  ``rebalance`` reads per-shard demand, EMA-steps the shares
+    toward the demand distribution (clamped to [min_share, max_share] x
+    1/N), and applies each shard's new envelope *relatively*: FD level
+    caps and RALT limits scale by (new_share / old_share), so the
+    per-shard autotuner's adjustments between rebalances are preserved.
+    """
+
+    def __init__(self, scfg: ShardConfig, shards: list[TieredLSM]):
+        self.scfg = scfg
+        self.shards = shards
+        n = len(shards)
+        self.shares = np.full(n, 1.0 / n)
+        self._scale = np.ones(n)          # applied share * N per shard
+        self.n_rebalances = 0
+        self.total_shift = 0.0            # cumulative |share| mass moved
+
+    # ------------------------------------------------------------------
+    def _demand(self, shard: TieredLSM) -> float:
+        """Per-shard fast-disk demand: the RALT hot-set size estimate
+        when the shard runs HotRAP (the paper's own "does the hot set
+        fit FD" signal), FD occupancy otherwise."""
+        if shard.ralt is not None:
+            return float(shard.ralt.hot_set_bytes)
+        return float(shard.fd_used_bytes())
+
+    def rebalance(self) -> np.ndarray:
+        """One arbitration round; returns the new share vector."""
+        n = len(self.shards)
+        if n == 1:
+            return self.shares
+        demand = np.array([self._demand(s) for s in self.shards])
+        total = demand.sum()
+        if total <= 0.0:
+            return self.shares            # no signal yet: keep shares
+        fair = 1.0 / n
+        target = np.clip(demand / total,
+                         self.scfg.min_share * fair,
+                         self.scfg.max_share * fair)
+        target /= target.sum()
+        new = (1.0 - self.scfg.ema) * self.shares + self.scfg.ema * target
+        new /= new.sum()
+        self.total_shift += 0.5 * float(np.abs(new - self.shares).sum())
+        self.shares = new
+        self.n_rebalances += 1
+        for i, shard in enumerate(self.shards):
+            self._apply(i, shard)
+        return self.shares
+
+    def _apply(self, i: int, shard: TieredLSM) -> None:
+        """Scale shard i's FD envelope to its awarded share.
+
+        scale == share * N (1.0 = fair share).  The finite FD level caps
+        grow/shrink with it — the last FD level is where retention
+        decides what stays on fast disk, so its cap *is* the shard's
+        promotion headroom — and the RALT is told its fd_size changed,
+        which moves the §3.7 clamp bounds [L_hs, R_hs] and tick cadence
+        along with the award.
+        """
+        new_scale = float(self.shares[i]) * len(self.shards)
+        old_scale = float(self._scale[i])
+        if new_scale == old_scale:
+            return
+        ratio = new_scale / old_scale
+        for li in range(1, shard.cfg.n_fd_levels):
+            shard.caps[li] = shard.caps[li] * ratio
+        ralt = shard.ralt
+        if ralt is not None:
+            ralt.cfg = dataclasses.replace(
+                ralt.cfg, fd_size=max(int(ralt.cfg.fd_size * ratio), 1))
+            lo, hi = ralt.cfg.l_hs, max(ralt.cfg.r_hs, ralt.cfg.l_hs + 1)
+            ralt.hot_set_limit = int(
+                np.clip(int(ralt.hot_set_limit * ratio), lo, hi))
+            ralt.phys_limit = max(int(ralt.phys_limit * ratio),
+                                  ralt.cfg.buffer_bytes)
+        self._scale[i] = new_scale
+
+    def snapshot(self) -> dict:
+        """Arbiter state for RunResult / benchmark JSON."""
+        return {
+            "n_shards": len(self.shards),
+            "shares": [round(float(s), 4) for s in self.shares],
+            "rebalances": self.n_rebalances,
+            "total_shift": round(self.total_shift, 4),
+            "min_share": self.scfg.min_share,
+            "max_share": self.scfg.max_share,
+            "rebalance_interval_ops": self.scfg.rebalance_interval_ops,
+        }
+
+
+class ShardedTieredLSM:
+    """N shared-nothing ``TieredLSM`` shards behind one router.
+
+    Public API mirrors ``TieredLSM`` (`put`/`get`/`delete`/`scan`/
+    `scan_range`/`flush_all`) plus the batched ``multi_get``.  ``stats``
+    aggregates the per-shard ``Stats`` field-wise; ``storages`` exposes
+    the per-shard ``StorageSim`` slices for the runner's shared-nothing
+    time accounting (shards run in parallel — the wall clock is the
+    busiest shard's, see core/runner.py).
+    """
+
+    def __init__(self, scfg: ShardConfig, cfg: LSMConfig,
+                 factory=None, seed: int = 0):
+        self.scfg = scfg
+        self.cfg = cfg                    # cluster-total config (template)
+        self.shard_cfg = shard_lsm_config(cfg, scfg)
+        if factory is None:
+            factory = lambda sub_cfg, s: TieredLSM(sub_cfg, seed=s)
+        self.shards: list[TieredLSM] = [
+            factory(self.shard_cfg, seed + i) for i in range(scfg.n_shards)]
+        n = scfg.n_shards
+        # range partitioning: shard i owns [i*key_space/N, (i+1)*key_space/N)
+        self._bounds_list = [(i + 1) * scfg.key_space // n
+                             for i in range(n - 1)]
+        self._bounds = np.array(self._bounds_list, dtype=np.uint64)
+        self.global_seq = 0               # cluster-wide sequence numbers
+        self.hot_budget = (HotBudget(scfg, self.shards)
+                           if scfg.hot_budget and n > 1 else None)
+        self._ops_since_rebalance = 0
+        # Router-level stat corrections (negative counters folded into
+        # the aggregate): a fan-out scan runs one shard-scan per
+        # participating shard and may overfetch records the merge then
+        # discards; the *served-record* metrics (scans, scanned_records,
+        # scan_served_*) are corrected back to the client-visible result
+        # so they stay comparable to an unsharded store.  The I/O spent
+        # on speculative overfetch stays charged (it is real work), as
+        # do the per-shard merge/pull counters and RALT hotness.
+        self._corrections = Stats()
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def shard_of(self, key: int) -> int:
+        """Scalar key -> shard routing (per-op hot path: plain Python
+        arithmetic, no numpy array round-trip; must agree with the
+        vectorized `_shard_ids` bit-for-bit)."""
+        n = self.scfg.n_shards
+        if n == 1:
+            return 0
+        if self.scfg.partitioning == "range":
+            return bisect.bisect_right(self._bounds_list, key)
+        return (((key * 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF) >> 32) % n
+
+    def _shard_ids(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized key -> shard bucketing (the router hot path)."""
+        n = self.scfg.n_shards
+        if n == 1:
+            return np.zeros(len(keys), dtype=np.int64)
+        keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        if self.scfg.partitioning == "range":
+            return np.searchsorted(self._bounds, keys,
+                                   side="right").astype(np.int64)
+        h = (keys * _HASH_MULT) >> np.uint64(32)
+        return (h % np.uint64(n)).astype(np.int64)
+
+    def _account_ops(self, n: int) -> None:
+        if self.hot_budget is None:
+            return
+        self._ops_since_rebalance += n
+        if self._ops_since_rebalance >= self.scfg.rebalance_interval_ops:
+            self._ops_since_rebalance = 0
+            self.hot_budget.rebalance()
+
+    # ------------------------------------------------------------------
+    # point ops
+    # ------------------------------------------------------------------
+    def put(self, key: int, vlen: int) -> int:
+        shard = self.shards[self.shard_of(key)]
+        # cluster-wide seq assignment: the shard's next put sees the
+        # router's counter, so seqs match the unsharded oracle exactly
+        # (and stay monotonic within each shard).
+        self.global_seq += 1
+        shard.seq = self.global_seq - 1
+        seq = shard.put(key, vlen)
+        self._account_ops(1)
+        return seq
+
+    def delete(self, key: int) -> int:
+        shard = self.shards[self.shard_of(key)]
+        self.global_seq += 1
+        shard.seq = self.global_seq - 1
+        seq = shard.delete(key)
+        self._account_ops(1)
+        return seq
+
+    def get(self, key: int):
+        out = self.shards[self.shard_of(key)].get(key)
+        self._account_ops(1)
+        return out
+
+    def multi_get(self, keys) -> list:
+        """Batched point lookups: one vectorized bucketing pass, then
+        each shard's bucket drains together (results in input order)."""
+        ks = np.ascontiguousarray(keys, dtype=np.uint64)
+        if len(ks) == 0:
+            return []
+        sids = self._shard_ids(ks)
+        out: list = [None] * len(ks)
+        for si in np.unique(sids):
+            shard = self.shards[int(si)]
+            for j in np.flatnonzero(sids == si):
+                out[int(j)] = shard.get(int(ks[j]))
+        self._account_ops(len(ks))
+        return out
+
+    # ------------------------------------------------------------------
+    # range ops
+    # ------------------------------------------------------------------
+    _TIER_FIELD = {"mem": "scan_served_mem", "FD": "scan_served_fd",
+                   "PC": "scan_served_pc", "SD": "scan_served_sd"}
+
+    def _fold_fanout(self, n_shard_scans: int, dropped) -> None:
+        """Fold one logical scan's fan-out back into honest aggregate
+        stats: k shard-scans count as 1 scan, and overfetched records
+        the merge discarded leave the served-record tallies."""
+        corr = self._corrections
+        corr.scans -= n_shard_scans - 1
+        for _, _, _, tier in dropped:
+            corr.scanned_records -= 1
+            field = self._TIER_FIELD[tier]
+            setattr(corr, field, getattr(corr, field) - 1)
+
+    def scan(self, lo: int, n: int) -> list[tuple[int, int, int]]:
+        """Up to `n` live records with key >= lo, cluster-wide order."""
+        if n <= 0:
+            return []
+        self._account_ops(1)
+        if self.scfg.partitioning == "range":
+            # shards are ordered by key range: walk them until n records
+            # (each is asked for exactly the remainder — no overfetch)
+            out: list[tuple[int, int, int]] = []
+            calls = 0
+            for si in range(self.shard_of(lo), self.scfg.n_shards):
+                out.extend(self.shards[si].scan(lo, n - len(out)))
+                calls += 1
+                if len(out) >= n:
+                    break
+            self._fold_fanout(calls, ())
+            return out[:n]
+        # hash: every shard may hold part of the range — fan out, merge
+        # the (disjoint-key, sorted) partials, keep the first n.  Each
+        # shard must be asked for n (all n winners could live on one),
+        # so the merge's discarded tail is corrected out of the stats.
+        parts = [s.scan_tagged(lo, n) for s in self.shards]
+        merged = list(heapq.merge(*parts))
+        self._fold_fanout(len(parts), merged[n:])
+        return [(k, s, v) for k, s, v, _ in merged[:n]]
+
+    def scan_range(self, lo: int, hi: int) -> list[tuple[int, int, int]]:
+        if hi < lo:
+            return []
+        self._account_ops(1)
+        if self.scfg.partitioning == "range":
+            out: list[tuple[int, int, int]] = []
+            lo_si, hi_si = self.shard_of(lo), self.shard_of(hi)
+            for si in range(lo_si, hi_si + 1):
+                out.extend(self.shards[si].scan_range(lo, hi))
+            self._fold_fanout(hi_si - lo_si + 1, ())
+            return out
+        parts = [s.scan_range(lo, hi) for s in self.shards]
+        self._fold_fanout(len(parts), ())
+        return list(heapq.merge(*parts))
+
+    # ------------------------------------------------------------------
+    # aggregation / runner plumbing
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Stats:
+        """Field-wise sum of the per-shard Stats plus the router's
+        fan-out corrections (fresh object; derived rates recompute from
+        the summed counters).  Served-record scan metrics match what
+        the client saw; I/O and merge-work counters keep the full
+        speculative fan-out cost."""
+        agg = Stats()
+        for f in dataclasses.fields(Stats):
+            total = getattr(self._corrections, f.name)
+            for shard in self.shards:
+                total += getattr(shard.stats, f.name)
+            setattr(agg, f.name, total)
+        return agg
+
+    @property
+    def storages(self) -> list:
+        return [s.storage for s in self.shards]
+
+    def flush_all(self) -> None:
+        for shard in self.shards:
+            shard.flush_all()
+
+    def reset_storage(self) -> None:
+        for shard in self.shards:
+            shard.reset_storage()
+        self._corrections = Stats()
+
+    def fd_used_bytes(self) -> int:
+        return sum(s.fd_used_bytes() for s in self.shards)
+
+    def total_records(self) -> int:
+        return sum(s.total_records() for s in self.shards)
+
+    def shard_knobs(self) -> dict:
+        """Effective cluster/admission settings for RunResult output."""
+        knobs = {
+            "n_shards": self.scfg.n_shards,
+            "partitioning": self.scfg.partitioning,
+            "range_promo_frac": self.shard_cfg.range_promo_frac,
+            "hot_budget": self.hot_budget is not None,
+        }
+        if self.hot_budget is not None:
+            knobs.update(self.hot_budget.snapshot())
+        return knobs

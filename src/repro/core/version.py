@@ -163,12 +163,23 @@ class GroupView:
     """
 
     __slots__ = ("sig", "keys", "seqs", "vlens", "src", "blks", "ssts",
-                 "sids", "n_source_records")
+                 "sids", "n_source_records", "sst_mins", "sst_maxs",
+                 "sst_pris")
 
     def __init__(self, sig: tuple, runs: list[list[SSTable]]):
         self.sig = sig
         self.ssts: list[SSTable] = [s for run in runs for s in run]
         self.sids = [s.sid for s in self.ssts]
+        # per-table fences + run priorities: which tables a per-level
+        # probe walk would line up for a key, and in what order (the
+        # point-get fast path's saved-probe accounting)
+        self.sst_mins = np.array([s.min_key for s in self.ssts],
+                                 dtype=np.uint64)
+        self.sst_maxs = np.array([s.max_key for s in self.ssts],
+                                 dtype=np.uint64)
+        self.sst_pris = np.array(
+            [pri for pri, run in enumerate(runs) for _ in run],
+            dtype=np.int32)
         parts_k, parts_s, parts_v, parts_b, parts_i, parts_p = \
             [], [], [], [], [], []
         si = 0
@@ -213,6 +224,34 @@ class GroupView:
         b = int(np.searchsorted(self.keys, np.uint64(hi), "right"))
         return a, b
 
+    def probes_replaced(self, key: int, winner_si: int | None) -> int:
+        """How many table probes the per-level walk would have spent
+        that the view's single binary search replaced.
+
+        A run holds at most one table covering `key`, and the walk
+        probes covering tables in run-priority order: on a hit it stops
+        at the winner's run (probes = covering tables in strictly
+        higher-priority runs, + the winner itself, vs 1 view search);
+        on a miss every covering table is probed (vs 1 search, floored
+        at 0 for the degenerate nothing-to-probe case)."""
+        k = np.uint64(key)
+        cover = (self.sst_mins <= k) & (k <= self.sst_maxs)
+        if winner_si is None:
+            return max(int(np.count_nonzero(cover)) - 1, 0)
+        above = cover & (self.sst_pris < self.sst_pris[winner_si])
+        return int(np.count_nonzero(above))
+
+    def point_find(self, key: int):
+        """Binary-search the view for `key`'s group-winning record.
+        Returns (seq, vlen, sstable_index, block) or None if the key is
+        absent from the whole group (tombstone winners are returned —
+        they shadow lower groups, exactly like the per-level probe)."""
+        i = int(np.searchsorted(self.keys, np.uint64(key), "left"))
+        if i >= len(self.keys) or int(self.keys[i]) != key:
+            return None
+        return (int(self.seqs[i]), int(self.vlens[i]),
+                int(self.src[i]), int(self.blks[i]))
+
 
 class ViewCache:
     """Signature-keyed bounded cache of GroupViews.  Because SSTables
@@ -224,6 +263,15 @@ class ViewCache:
         self.capacity = capacity
         self._views: dict[tuple, GroupView] = {}
         self.builds = 0
+
+    def peek(self, sig: tuple) -> GroupView | None:
+        """The cached view for `sig`, or None — never builds.  A hit
+        refreshes LRU order (point gets riding a scan-built view keep
+        it alive) but does not count as a build."""
+        view = self._views.pop(sig, None)
+        if view is not None:
+            self._views[sig] = view
+        return view
 
     def get(self, sig: tuple, runs_thunk) -> GroupView:
         view = self._views.pop(sig, None)

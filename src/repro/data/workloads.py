@@ -55,6 +55,11 @@ class KeyDist:
     hot_ops: float = 0.95      # hotspot: fraction of ops hitting hot set
     zipf_s: float = 0.99
     hot_offset: float = 0.0    # shift the hotspot (dynamic workloads)
+    scramble: bool = True      # YCSB rank->key hashing; False keeps hot
+                               # keys *contiguous* at the bottom of the
+                               # key space (shard-skew workloads: a
+                               # range-partitioned cluster then sees all
+                               # the heat on one shard)
     # cached zipfian CDF as (zipf_s, cdf) (O(n_keys) to build; reused
     # across sample calls, rebuilt if n_keys or zipf_s change)
     _zipf_cdf: tuple | None = dataclasses.field(
@@ -75,7 +80,9 @@ class KeyDist:
                             rng.integers(0, n_hot, size=m),
                             n_hot + rng.integers(0, max(n - n_hot, 1),
                                                  size=m))
-            return _scramble((start + offs) % n, n)
+            ranks = (start + offs) % n
+            return _scramble(ranks, n) if self.scramble \
+                else ranks.astype(np.int64)
         if self.kind == "zipfian":
             # draw ranks by inverse-CDF over 1/k^s, then scramble
             if (self._zipf_cdf is None or self._zipf_cdf[0] != self.zipf_s
@@ -87,7 +94,7 @@ class KeyDist:
                 self._zipf_cdf = (self.zipf_s, cdf)
             u = rng.random(m)
             r = np.searchsorted(self._zipf_cdf[1], u)
-            return _scramble(r, n)
+            return _scramble(r, n) if self.scramble else r.astype(np.int64)
         raise ValueError(self.kind)
 
 

@@ -1,0 +1,364 @@
+"""Sharded engine (core/shards.py): cross-shard equivalence vs an
+unsharded oracle, the batched router, the HotBudget arbiter, the
+point-get GroupView fast path, and the RunResult knob surfacing.
+
+The equivalence contract: for any shard count and either partitioning,
+``put``/``delete`` return the same seqs and ``get``/``scan``/
+``scan_range`` return byte-identical results to one ``TieredLSM`` fed
+the identical op stream — placement (tiers, promotion, HotBudget
+awards) must never leak into visibility.
+"""
+import dataclasses
+import io
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (LSMConfig, ShardConfig, ShardedTieredLSM, TieredLSM,
+                        make_sharded_system, make_system)
+from repro.core.runner import (db_key_count, default_config, load_db,
+                               run_workload)
+from repro.core.shards import shard_lsm_config
+from repro.data.workloads import (OP_READ, OP_SCAN, KeyDist, MIXES, ycsb)
+
+KIB = 1024
+MIB = 1024 * 1024
+KEYSPACE = 800
+
+
+def cluster_cfg(**kw):
+    base = dict(fd_size=512 * KIB, sd_size=4 * MIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16,
+                hotrap=True)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def mixed_trace(db, oracle, n_ops=4000, seed=5, keyspace=KEYSPACE):
+    """Drive both stores with one YCSB-ish mixed stream, asserting
+    byte-identical results at every op."""
+    rng = np.random.default_rng(seed)
+    for i in range(n_ops):
+        k = int(rng.integers(0, keyspace))
+        r = rng.random()
+        if r < 0.50:
+            assert db.put(k, 100) == oracle.put(k, 100)
+        elif r < 0.60:
+            assert db.delete(k) == oracle.delete(k)
+        elif r < 0.80:
+            assert db.get(k) == oracle.get(k), (i, k)
+        elif r < 0.90:
+            lo, ln = int(rng.integers(0, keyspace)), int(rng.integers(1, 40))
+            assert db.scan(lo, ln) == oracle.scan(lo, ln), (i, lo, ln)
+        else:
+            lo = int(rng.integers(0, keyspace))
+            hi = lo + int(rng.integers(0, 150))
+            assert db.scan_range(lo, hi) == oracle.scan_range(lo, hi)
+
+
+# ----------------------------------------------------------------------
+# cross-shard equivalence
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("partitioning", ["hash", "range"])
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+def test_sharded_matches_unsharded_oracle(partitioning, n_shards):
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=n_shards, partitioning=partitioning,
+                       key_space=KEYSPACE, rebalance_interval_ops=500,
+                       memtable_floor=8 * KIB, block_cache_floor=8 * KIB)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    mixed_trace(db, oracle)
+    # served-record accounting matches the oracle despite fan-out
+    # overfetch (the router corrects discarded records back out)
+    s, o = db.stats, oracle.stats
+    assert s.scans == o.scans
+    assert s.scanned_records == o.scanned_records
+    assert (s.scan_served_mem + s.scan_served_fd + s.scan_served_pc
+            + s.scan_served_sd) == o.scanned_records
+    if n_shards > 1:
+        # traffic spread over the partitions, and shards really flush
+        puts = [sh.stats.puts for sh in db.shards]
+        assert sum(1 for p in puts if p > 0) > 1, puts
+        assert sum(sh.stats.flushes for sh in db.shards) > 0
+
+
+def test_sharded_equivalence_with_arbiter_active():
+    """HotBudget awards (caps + RALT budgets) must not change results."""
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=4, partitioning="range", key_space=KEYSPACE,
+                       rebalance_interval_ops=200)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    mixed_trace(db, oracle, n_ops=3000, seed=9)
+    assert db.hot_budget.n_rebalances > 0
+
+
+@pytest.mark.parametrize("system", ["rocksdb_tiered", "prismdb"])
+def test_sharded_baselines_match_their_oracle(system):
+    cfg = cluster_cfg(hotrap=False)
+    scfg = ShardConfig(n_shards=2, partitioning="hash", key_space=KEYSPACE)
+    db = make_sharded_system(system, cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system(system, cfg, seed=0)
+    mixed_trace(db, oracle, n_ops=2500, seed=7)
+
+
+def test_multi_get_matches_individual_gets():
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=4, partitioning="hash", key_space=KEYSPACE)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(0, KEYSPACE, 2):
+        db.put(k, 120)
+    keys = np.arange(0, KEYSPACE, 7, dtype=np.uint64)
+    assert db.multi_get(keys) == [db.get(int(k)) for k in keys]
+    assert db.multi_get([]) == []
+
+
+def test_router_bucketing_is_consistent():
+    """Vectorized bucketing must agree with per-key routing, and range
+    partitioning must keep shards in key order."""
+    rng = np.random.default_rng(2)
+    big = rng.integers(0, 2 ** 63, size=64, dtype=np.uint64)
+    for part in ("hash", "range"):
+        scfg = ShardConfig(n_shards=4, partitioning=part, key_space=1000)
+        db = ShardedTieredLSM(scfg, cluster_cfg())
+        keys = np.arange(0, 1000, dtype=np.uint64)
+        sids = db._shard_ids(keys)
+        assert all(int(sids[k]) == db.shard_of(int(k)) for k in
+                   range(0, 1000, 37))
+        # the scalar fast path must agree with the vectorized one even
+        # for keys far outside key_space (inserted keys, hash spread)
+        assert [db.shard_of(int(k)) for k in big] \
+            == db._shard_ids(big).tolist()
+        if part == "range":
+            assert (np.diff(sids) >= 0).all()
+            assert sids.min() == 0 and sids.max() == 3
+
+
+def test_shard_config_helper_derives_range_key_space():
+    """configs.hotrap_kv.shard_config must never hand a range cluster a
+    key_space that dwarfs the real key universe (all keys -> shard 0)."""
+    from repro.configs.hotrap_kv import CONFIG, shard_config
+    ranged = dataclasses.replace(CONFIG, partitioning="range")
+    scfg = shard_config(ranged)
+    from repro.configs.hotrap_kv import lsm_config
+    from repro.core.runner import db_key_count
+    nk = db_key_count(lsm_config(CONFIG), CONFIG.value_len)
+    assert scfg.key_space == 2 * nk       # loaded range + insert headroom
+    assert shard_config(CONFIG).key_space == 2 ** 62  # hash: unused
+    assert shard_config(ranged, key_space=123).key_space == 123
+
+
+def test_shard_lsm_config_splits_resources():
+    cfg = cluster_cfg()
+    sub = shard_lsm_config(cfg, ShardConfig(n_shards=4))
+    assert sub.fd_size == cfg.fd_size // 4
+    assert sub.sd_size == cfg.sd_size // 4
+    assert sub.target_sstable_bytes == cfg.target_sstable_bytes
+    assert shard_lsm_config(cfg, ShardConfig(n_shards=1)) is cfg
+
+
+# ----------------------------------------------------------------------
+# HotBudget arbiter
+# ----------------------------------------------------------------------
+def test_hot_budget_shifts_toward_skewed_shard():
+    """Skewed traffic on a range-partitioned cluster must earn the hot
+    shard > fair-share FD budget: bigger last-FD-level caps and RALT
+    limits, smaller ones for cold shards."""
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=4, partitioning="range", key_space=KEYSPACE,
+                       rebalance_interval_ops=10 ** 9)   # manual rebalance
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 200)
+    db.flush_all()
+    base_caps = [list(s.caps) for s in db.shards]
+    base_hot = [s.ralt.hot_set_limit for s in db.shards]
+    rng = np.random.default_rng(3)
+    for _ in range(6000):                 # hammer shard 0's key range
+        db.get(int(rng.integers(0, KEYSPACE // 4)))
+    for _ in range(4):
+        shares = db.hot_budget.rebalance()
+    fair = 1.0 / 4
+    assert shares[0] - fair >= 0.10, shares
+    assert shares[0] == max(shares)
+    assert abs(float(shares.sum()) - 1.0) < 1e-9
+    n_fd = db.shards[0].cfg.n_fd_levels
+    for li in range(1, n_fd):
+        assert db.shards[0].caps[li] > base_caps[0][li]
+        assert db.shards[3].caps[li] < base_caps[3][li]
+    assert db.shards[0].ralt.hot_set_limit > base_hot[0]
+    hb = db.hot_budget.snapshot()
+    assert hb["rebalances"] == 4 and len(hb["shares"]) == 4
+
+
+def test_hot_budget_respects_share_bounds():
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=4, partitioning="range", key_space=KEYSPACE,
+                       rebalance_interval_ops=10 ** 9, ema=1.0)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 200)
+    db.flush_all()
+    for _ in range(6000):                 # all heat on shard 0
+        db.get(0), db.get(1), db.get(2)
+    for _ in range(8):
+        shares = db.hot_budget.rebalance()
+    fair = 1.0 / 4
+    # shares clip to [min_share, max_share] x fair *before* the final
+    # renormalisation; the post-normalisation floor/ceiling follow from
+    # the worst-case normaliser.
+    norm_hi = (scfg.max_share + 3 * scfg.min_share) * fair
+    norm_lo = (scfg.min_share + 3 * scfg.max_share) * fair
+    assert shares.max() <= scfg.max_share * fair / min(norm_lo, 1.0) + 1e-9
+    assert shares.min() >= scfg.min_share * fair / max(norm_hi, 1.0) - 1e-9
+    assert abs(float(shares.sum()) - 1.0) < 1e-9
+
+
+def test_hot_budget_noop_cases():
+    """N=1 clusters and hot_budget=False must run without an arbiter."""
+    cfg = cluster_cfg()
+    db1 = make_sharded_system(
+        "hotrap", cfg, shard_cfg=ShardConfig(n_shards=1), seed=0)
+    assert db1.hot_budget is None
+    db2 = make_sharded_system(
+        "hotrap", cfg,
+        shard_cfg=ShardConfig(n_shards=4, hot_budget=False), seed=0)
+    assert db2.hot_budget is None
+    for k in range(200):
+        db1.put(k, 100), db2.put(k, 100)
+    assert db1.get(5) == db2.get(5)
+
+
+# ----------------------------------------------------------------------
+# point-get GroupView fast path
+# ----------------------------------------------------------------------
+def test_point_get_view_fast_path_equivalent_and_counted():
+    """Once a scan materializes the group views, gets must serve off
+    them (counting saved probes) with results identical to the probe
+    walk on a twin store with the fast path disabled."""
+    cfg = cluster_cfg()
+    fast = make_system("hotrap", cfg, seed=0)
+    slow = make_system("hotrap", dataclasses.replace(
+        cfg, point_view_gets=False), seed=0)
+    rng = np.random.default_rng(13)
+    for db in (fast, slow):
+        assert db.stats.get_view_hits == 0
+    for i in range(3000):
+        k = int(rng.integers(0, 600))
+        r = rng.random()
+        if r < 0.5:
+            assert fast.put(k, 150) == slow.put(k, 150)
+        elif r < 0.6:
+            lo = int(rng.integers(0, 600))
+            assert fast.scan(lo, 25) == slow.scan(lo, 25)
+        else:
+            assert fast.get(k) == slow.get(k), (i, k)
+    assert fast.stats.get_view_hits > 0
+    assert fast.stats.get_probes_saved > 0
+    assert slow.stats.get_view_hits == 0
+    # the persistent MergeCounters mirrors the Stats tallies
+    assert fast.point_counters.view_gets == fast.stats.get_view_hits
+    assert fast.point_counters.probes_saved == fast.stats.get_probes_saved
+
+
+def test_point_view_never_builds_views():
+    """A get-only workload must never construct a GroupView (the fast
+    path only *reuses* scan-built views)."""
+    db = make_system("hotrap", cluster_cfg(), seed=0)
+    for k in range(1500):
+        db.put(k, 150)
+    db.flush_all()
+    for k in range(0, 1500, 3):
+        db.get(k)
+    assert db.stats.view_builds == 0
+    assert db.stats.get_view_hits == 0
+
+
+def test_point_view_disabled_for_interposing_baselines():
+    """Mutant / SAS-Cache hook _search_levels (temperatures, secondary
+    cache); the fast path must stay off so those hooks keep firing."""
+    cfg = cluster_cfg(hotrap=False)
+    assert not make_system("mutant", cfg)._point_view_ok
+    assert not make_system("sas_cache", cfg)._point_view_ok
+    assert make_system("rocksdb_tiered", cfg)._point_view_ok
+
+
+def test_sd_view_get_still_promotes():
+    """An SD-served get through the view path must feed the promotion
+    cache exactly like the probe walk (touched list via the Version)."""
+    cfg = default_config("tiny")
+    db = make_system("hotrap", cfg)
+    nk = db_key_count(cfg, 1000)
+    load_db(db, nk, 1000, seed=0)
+    db.scan(0, 50)                        # materialize both group views
+    before = db.stats.pc_inserts + db.stats.pc_insert_aborts
+    served_sd = db.stats.served_sd
+    hits = db.stats.get_view_hits
+    for k in range(nk // 2, nk // 2 + 400):
+        db.get(k)
+    assert db.stats.get_view_hits > hits
+    assert db.stats.served_sd > served_sd
+    assert db.stats.pc_inserts + db.stats.pc_insert_aborts > before
+
+
+# ----------------------------------------------------------------------
+# runner integration + knob surfacing
+# ----------------------------------------------------------------------
+def test_runner_drives_sharded_cluster_and_surfaces_knobs():
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=4, partitioning="hash", key_space=KEYSPACE,
+                       rebalance_interval_ops=400)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 200)
+    db.flush_all()
+    db.reset_storage()
+    wl = ycsb("SR", KeyDist("zipfian", KEYSPACE), 1500, 200, seed=7)
+    res = run_workload(db, wl, name="hotrap-x4")
+    assert res.n_shards == 4
+    assert res.range_promo_frac == cfg.range_promo_frac
+    assert res.shard_budget is not None
+    assert res.shard_budget["partitioning"] == "hash"
+    assert len(res.shard_budget["shares"]) == 4
+    assert res.stats["scans"] > 0 and res.throughput > 0
+    assert "shards" in res.storage and len(res.storage["shards"]) == 4
+    # aggregate storage sums the per-shard counters
+    fd_reads = sum(s["FD"]["read_bytes"] for s in res.storage["shards"])
+    assert res.storage["FD"]["read_bytes"] == fd_reads
+
+
+def test_runresult_knobs_for_unsharded_db():
+    cfg = cluster_cfg()
+    db = make_system("hotrap", cfg)
+    for k in range(300):
+        db.put(k, 200)
+    wl = ycsb("RW", KeyDist("uniform", 300), 800, 200, seed=3)
+    res = run_workload(db, wl, name="hotrap")
+    assert res.n_shards == 1
+    assert res.shard_budget is None
+    assert res.range_promo_frac == cfg.range_promo_frac
+    assert "get_view_hits" in res.stats
+
+
+def test_sharded_stats_aggregate_and_pickle():
+    """Aggregated Stats must equal the field-wise shard sums, and the
+    cluster must survive the DB_CACHE pickle round-trip."""
+    cfg = cluster_cfg()
+    scfg = ShardConfig(n_shards=2, partitioning="hash", key_space=KEYSPACE)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 150)
+    for k in range(0, KEYSPACE, 5):
+        db.get(k)
+    s = db.stats
+    assert s.gets == sum(sh.stats.gets for sh in db.shards) == KEYSPACE // 5
+    assert s.puts == KEYSPACE
+    buf = io.BytesIO()
+    pickle.dump(db, buf, protocol=pickle.HIGHEST_PROTOCOL)
+    clone = pickle.loads(buf.getvalue())
+    clone.reset_storage()
+    assert clone.get(10) == db.get(10)
+    assert clone.scan(0, 15) == db.scan(0, 15)
