@@ -15,7 +15,7 @@ import pickle
 import sys
 import time
 
-from repro.core import LSMConfig
+from repro.core import LSMConfig, ShardConfig
 from repro.core.baselines import make_system
 from repro.core.runner import db_key_count, load_db, run_workload
 from repro.core.storage import MIB
@@ -48,6 +48,37 @@ def make_cfg(profile: str | None = None, **kw) -> LSMConfig:
 
 def n_ops(profile: str | None = None) -> int:
     return PROFILES[profile or profile_name()]["n_ops"]
+
+
+# The three cluster policies the skew studies compare (used by
+# benchmarks/shifting_hotspot.py and benchmarks/tail_latency.py — one
+# definition so the two stay comparable).
+SHARD_POLICIES = {
+    "static":      dict(hot_budget=False, repartition=False),
+    "arbiter":     dict(hot_budget=True, repartition=False),
+    "repartition": dict(hot_budget=True, repartition=True),
+}
+
+
+def skew_shard_config(nk: int, phase_ops: int, n_shards: int = 4,
+                      **knobs) -> ShardConfig:
+    """Range-partitioned cluster recipe for the contiguous-skew
+    studies: trigger cadences scale with the measurement phase length,
+    the migration stream drains one shard (~nk/N records) in about a
+    quarter phase, and the demand signal is the load-following
+    ``fg_util`` (RALT hot-set estimates are per-run snapshots that
+    decay only on access, so a shard that was hot a phase ago still
+    advertises a big hot set and masks the newly hot shard)."""
+    return ShardConfig(
+        n_shards=n_shards, partitioning="range", key_space=nk,
+        demand_signal="fg_util",
+        rebalance_interval_ops=max(phase_ops // 12, 250),
+        repartition_interval_ops=max(phase_ops // 8, 250),
+        repartition_cooldown_ops=max(phase_ops // 16, 100),
+        migration_records_per_op=max(
+            4 * nk // max(n_shards * phase_ops, 1), 64),
+        min_shards=2, max_shards=2 * n_shards,
+        **knobs)
 
 
 class LoadedDBCache:

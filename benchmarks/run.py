@@ -14,13 +14,14 @@ import time
 import traceback
 
 from . import (ablations, cost_breakdown, dynamic_workload, ralt_micro,
-               tail_latency, twitter_traces, wa_tuning, ycsb_scan,
-               ycsb_shard, ycsb_throughput)
+               shifting_hotspot, tail_latency, twitter_traces, wa_tuning,
+               ycsb_scan, ycsb_shard, ycsb_throughput)
 
 SECTIONS = [
     ("ycsb", ycsb_throughput.main),          # Fig. 6 & 7
     ("scan", ycsb_scan.main),                # YCSB-E (scan subsystem)
     ("shard", ycsb_shard.main),              # sharded scaling + HotBudget
+    ("repart", shifting_hotspot.main),       # dynamic repartitioning
     ("tail", tail_latency.main),             # Fig. 8
     ("twitter", twitter_traces.main),        # Fig. 9-11
     ("breakdown", cost_breakdown.main),      # Fig. 12-14

@@ -1,0 +1,168 @@
+"""Shifting-hotspot benchmark: dynamic repartitioning vs budget-only
+arbitration vs a static partition map (core/shards.py ``Repartitioner``).
+
+The workload is the sharded engine's worst case: a *contiguous*
+(unscrambled) hotspot that walks across the keyspace in stages, so at
+any moment nearly all traffic lands inside one range partition and the
+hot partition keeps changing.  Three cluster policies run the identical
+stage sequence on a 4-shard range-partitioned HotRAP cluster:
+
+* ``static``      — fixed 1/N partition map, fixed 1/N FD budgets;
+* ``arbiter``     — ``HotBudget`` re-budgets FD toward the hot shard
+                    (PR 4), but the partition map is fixed: every hot
+                    read still funnels through one shard's devices;
+* ``repartition`` — ``HotBudget`` plus the ``Repartitioner``: the hot
+                    shard splits at its median hot key (heat divides
+                    over two device pairs) and cold neighbours merge,
+                    following the hotspot as it walks.
+
+Reported throughput is the paper-style final-10% window metric per
+stage, aggregated over stages as window-ops / total-window-time.
+
+``--smoke`` (CI shard-smoke job) gates, on the quick profile:
+(a) repartitioning >= budget-only arbitration on aggregate throughput,
+(b) at least one split AND one merge actually happened, and
+(c) a mid-workload split + merge stays byte-identical to the unsharded
+    oracle (a compact interleaved get/scan trace).
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import LSMConfig, ShardConfig, make_sharded_system, make_system
+from repro.core.runner import db_key_count, load_db, run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import SHARD_POLICIES, emit, make_cfg, n_ops, skew_shard_config
+
+N_SHARDS = 4
+HOT_FRAC = 0.05
+STAGES = 5                      # hotspot offsets walk 0 -> 0.75
+
+
+def _loaded(cfg, scfg, value_len: int, seed: int = 0):
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=seed)
+    nk = db_key_count(cfg, value_len)
+    load_db(db, nk, value_len, seed)
+    db.reset_storage()
+    return db
+
+
+def run_walk(value_len: int = 1000, tag: str = "shifting_hotspot",
+             quick: bool = False) -> dict:
+    """The walking-hotspot stage sweep over all three policies."""
+    profile = "quick" if quick else None
+    cfg = make_cfg(profile)
+    nk = db_key_count(cfg, value_len)
+    ops_per_stage = max(n_ops(profile) // STAGES, 4000)
+    offsets = np.linspace(0.0, 0.75, STAGES)
+    results: dict = {}
+    for name, knobs in SHARD_POLICIES.items():
+        scfg = skew_shard_config(nk, ops_per_stage, N_SHARDS, **knobs)
+        db = _loaded(cfg, scfg, value_len)
+        window_ops = window_time = 0.0
+        stage_thr = []
+        for si, off in enumerate(offsets):
+            dist = KeyDist("hotspot", nk, hot_frac=HOT_FRAC,
+                           hot_offset=float(off), scramble=False)
+            wl = ycsb("RO", dist, ops_per_stage, value_len, seed=11 + si)
+            res = run_workload(db, wl, name=f"{name}/stage{si}",
+                               collect_latency=False)
+            stage_thr.append(res.throughput)
+            window_ops += res.n_ops * 0.1
+            window_time += res.tail_window_seconds
+        overall = window_ops / max(window_time, 1e-12)
+        rep = db.repartitioner
+        snap = rep.snapshot() if rep is not None else None
+        extra = ""
+        if snap is not None:
+            extra = (f";splits={snap['n_splits']};merges={snap['n_merges']}"
+                     f";migrated_mb={snap['migrated_bytes'] / 2 ** 20:.1f}"
+                     f";n_shards={snap['n_shards']}")
+        emit(f"{tag}/walk/{name}", 1e6 / max(overall, 1e-9),
+             f"thr={overall:.0f}ops/s;"
+             f"stage_thr={'/'.join(f'{t:.0f}' for t in stage_thr)}"
+             + extra)
+        results[name] = (overall, snap)
+    return results
+
+
+def equivalence_check() -> None:
+    """Byte-identical get/scan vs the unsharded oracle across at least
+    one split and one merge (the acceptance clause the tests enforce at
+    scale; here a compact version guards the benchmark itself)."""
+    KIB = 1024
+    cfg = LSMConfig(fd_size=512 * KIB, sd_size=4 * 1024 * KIB,
+                    target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                    block_cache_bytes=16 * KIB, hotrap=True)
+    keyspace = 800
+    scfg = ShardConfig(n_shards=N_SHARDS, partitioning="range",
+                       key_space=keyspace, repartition=True,
+                       repartition_interval_ops=10 ** 9,
+                       migration_records_per_op=32,
+                       memtable_floor=8 * KIB, block_cache_floor=8 * KIB)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    rng = np.random.default_rng(23)
+    rep = db.repartitioner
+
+    def trade(n):
+        for _ in range(n):
+            k = int(rng.integers(0, keyspace))
+            r = rng.random()
+            if r < 0.5:
+                assert db.put(k, 120) == oracle.put(k, 120)
+            elif r < 0.8:
+                assert db.get(k) == oracle.get(k)
+            else:
+                lo = int(rng.integers(0, keyspace))
+                assert db.scan(lo, 20) == oracle.scan(lo, 20)
+
+    trade(2000)
+    assert rep.force_split(0), "split did not start"
+    trade(500)                  # interleaved with the live migration
+    rep.drain()
+    trade(500)
+    assert rep.force_merge(len(db.shards) - 2), "merge did not start"
+    trade(500)
+    rep.drain()
+    trade(1000)
+    assert rep.n_splits >= 1 and rep.n_merges >= 1
+
+
+def smoke() -> None:
+    """CI tripwire (see .github/workflows/ci.yml shard-smoke)."""
+    failures = []
+    equivalence_check()
+    print("EQUIVALENCE OK: split+merge byte-identical to oracle",
+          flush=True)
+    results = run_walk(quick=True)
+    thr_arb, _ = results["arbiter"]
+    thr_rep, snap = results["repartition"]
+    if snap is None or snap["n_splits"] < 1 or snap["n_merges"] < 1:
+        failures.append(f"expected >= 1 split and >= 1 merge, got {snap}")
+    if thr_rep < thr_arb:
+        failures.append(f"repartition throughput {thr_rep:.0f} < "
+                        f"budget-only arbiter {thr_arb:.0f}")
+    if failures:
+        for f in failures:
+            print(f"SMOKE FAIL: {f}", flush=True)
+        raise SystemExit(1)
+    print(f"SMOKE OK: repartition {thr_rep:.0f}ops/s >= arbiter "
+          f"{thr_arb:.0f}ops/s "
+          f"({thr_rep / max(thr_arb, 1e-9):.2f}x), "
+          f"splits={snap['n_splits']}, merges={snap['n_merges']}",
+          flush=True)
+
+
+def main(quick: bool = False):
+    run_walk(quick=quick)
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main(quick="--quick" in sys.argv)

@@ -2,15 +2,51 @@
 
 HotRAP serves most reads from FD => the p99/p999 tail (dominated by SD
 random reads in tiered baselines) collapses toward the FD latency.
+
+Sharded section (`fig8_shard`, ROADMAP item): the same hotspot made
+*contiguous* (unscrambled) on a range-partitioned 4-shard cluster, so
+all the heat funnels through one shard and the tail inflates with that
+shard's device utilisation (the M/M/1-style 1/(1-rho) model in
+core/runner.py).  Three policies are compared — static partition map,
+``HotBudget`` budget-only arbitration, and dynamic repartitioning
+(``Repartitioner``) — the p99/p999 table lands in
+docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
-from repro.core.runner import run_workload
+from repro.core import make_sharded_system
+from repro.core.runner import db_key_count, load_db, run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import DB_CACHE, emit, make_cfg, n_ops
+from .common import (DB_CACHE, SHARD_POLICIES, emit, make_cfg, n_ops,
+                     skew_shard_config)
 
 SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap", "sas_cache"]
+
+
+def sharded_tail(quick: bool = False, tag: str = "fig8_shard") -> dict:
+    """Skew-induced tail inflation vs the arbiter and vs repartitioning
+    on a range-partitioned cluster under contiguous hotspot skew."""
+    profile = "quick" if quick else None
+    cfg = make_cfg(profile)
+    nk = db_key_count(cfg, 1000)
+    ops = n_ops(profile)
+    out = {}
+    for name, knobs in SHARD_POLICIES.items():
+        scfg = skew_shard_config(nk, ops, **knobs)
+        db = make_sharded_system("hotrap", cfg, shard_cfg=scfg)
+        load_db(db, nk, 1000, 0)
+        db.reset_storage()
+        dist = KeyDist("hotspot", nk, scramble=False)
+        wl = ycsb("RO", dist, ops, 1000, seed=11)
+        res = run_workload(db, wl, name=name)
+        out[name] = res
+        emit(f"{tag}/RO/{name}/p99", res.p99 * 1e6,
+             f"p999={res.p999 * 1e6:.1f}us;thr={res.throughput:.0f}ops/s;"
+             f"fd_hit={res.fd_hit_rate:.3f};"
+             f"repartitions={res.n_repartitions};"
+             f"migrated_mb={res.migration_bytes / 2 ** 20:.1f}")
+    return out
 
 
 def main(quick: bool = False):
@@ -23,6 +59,7 @@ def main(quick: bool = False):
             res = run_workload(db, wl, name=system)
             emit(f"fig8/{mix}/{system}/p99", res.p99 * 1e6,
                  f"p999={res.p999 * 1e6:.1f}us")
+    sharded_tail(quick=quick)
 
 
 if __name__ == "__main__":

@@ -28,6 +28,15 @@ class HotrapKVConfig:
     n_shards: int = 4                 # shared-nothing keyspace partitions
     partitioning: str = "hash"        # "hash" | "range"
     hot_budget: bool = True           # cluster-scope §3.7 FD arbiter
+    # --- dynamic repartitioning (core/shards.py Repartitioner) ---
+    repartition: bool = False         # split/merge hot partitions with
+                                      # live migration (range only)
+    min_shards: int = 2               # merges never shrink below
+    max_shards: int = 8               # splits never grow above
+    split_factor: float = 2.0         # demand > factor x fair -> split
+    merge_factor: float = 0.5         # pair demand < factor x 2 fair
+    demand_signal: str = "auto"       # "auto" | "hot_bytes" | "fd_used"
+                                      # | "fg_util" (engine-agnostic)
 
 
 CONFIG = HotrapKVConfig()
@@ -61,7 +70,12 @@ def shard_config(c: HotrapKVConfig = CONFIG,
         else:
             key_space = 2 ** 62
     return ShardConfig(n_shards=c.n_shards, partitioning=c.partitioning,
-                       key_space=key_space, hot_budget=c.hot_budget)
+                       key_space=key_space, hot_budget=c.hot_budget,
+                       repartition=c.repartition,
+                       min_shards=c.min_shards, max_shards=c.max_shards,
+                       split_factor=c.split_factor,
+                       merge_factor=c.merge_factor,
+                       demand_signal=c.demand_signal)
 
 
 def tiering_defaults(fast_slots: int) -> dict:

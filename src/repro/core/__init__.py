@@ -8,9 +8,10 @@ Public API:
     RALT, RaltConfig          — the hotness tracker (core/ralt.py)
     make_system, SYSTEMS      — paper baselines (core/baselines.py)
     make_sharded_system       — N-shard shared-nothing construction
-    ShardConfig, ShardedTieredLSM, HotBudget
+    ShardConfig, ShardedTieredLSM, HotBudget, Repartitioner
                               — keyspace-partitioned cluster with the
-                                cross-shard FD-budget arbiter
+                                cross-shard FD-budget arbiter and
+                                dynamic split/merge repartitioning
                                 (core/shards.py)
     StorageSim                — simulated tiered devices (core/storage.py)
 """
@@ -19,5 +20,6 @@ from .version import GroupView, Superversion, Version  # noqa: F401
 from .ralt import RALT, RaltConfig             # noqa: F401
 from .baselines import (SYSTEMS, make_sharded_system,  # noqa: F401
                         make_system)
-from .shards import HotBudget, ShardConfig, ShardedTieredLSM  # noqa: F401
+from .shards import (HotBudget, Repartitioner, ShardConfig,  # noqa: F401
+                     ShardedTieredLSM)
 from .storage import StorageSim                # noqa: F401

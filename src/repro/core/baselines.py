@@ -337,7 +337,7 @@ def make_sharded_system(name: str, cfg: LSMConfig | None = None,
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     scfg = shard_cfg or ShardConfig()
-    return ShardedTieredLSM(
-        scfg, cfg,
-        factory=lambda sub_cfg, s: make_system(name, sub_cfg, seed=s),
-        seed=seed)
+    # construction by system *name* (not a factory closure) keeps the
+    # cluster picklable and lets the Repartitioner build destination
+    # shards after a DB_CACHE round-trip
+    return ShardedTieredLSM(scfg, cfg, seed=seed, system=name)

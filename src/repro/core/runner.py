@@ -34,9 +34,19 @@ class RunResult:
                                             # per scanned record (whole run)
     # --- effective admission / cluster settings (PR 4) ---
     range_promo_frac: float = 0.0   # the run's whole-range admission knob
-    n_shards: int = 1
+    n_shards: int = 1               # shard count at the END of the run
+                                    # (repartitioning changes it mid-run)
     shard_budget: dict | None = None  # HotBudget knobs + final shares
                                       # (None when unsharded / arbiter off)
+    # --- dynamic repartitioning (PR 5) ---
+    n_repartitions: int = 0         # splits + merges during THIS run
+    migration_bytes: int = 0        # pre-copy reads + install writes,
+                                    # this run (deltas — the db's
+                                    # counters persist across runs)
+    repartition: dict | None = None  # Repartitioner.snapshot() at run
+                                     # end: cumulative counters since
+                                     # reset_storage, events, bounds,
+                                     # knobs (None when off)
 
     @property
     def p99(self) -> float:
@@ -86,9 +96,20 @@ def load_db(db: TieredLSM, n_keys: int, value_len: int, seed: int = 0
 
 def _db_storages(db) -> list:
     """The DB's StorageSim slices: one for a plain TieredLSM, one per
-    shard for a ShardedTieredLSM (shared-nothing accounting)."""
+    shard for a ShardedTieredLSM (shared-nothing accounting, including
+    slices retired by repartitioning — their history counts)."""
     sts = getattr(db, "storages", None)
     return list(sts) if sts else [db.storage]
+
+
+def _live_storages(db) -> list:
+    """Only the currently-live shards' slices (per-op latency deltas:
+    a storage retired *before* the op is frozen, so its delta is
+    provably zero — no need to walk the retired list every op)."""
+    shards = getattr(db, "shards", None)
+    if shards is None:
+        return [db.storage]
+    return [s.storage for s in shards]
 
 
 def _merged_storage_snapshot(sts: list) -> dict:
@@ -122,20 +143,36 @@ def run_workload(db, wl: Workload, name: str = "?",
     the window toward 1/N (throughput scales), while a skewed workload
     leaves one hot shard gating the cluster.  Stats are the field-wise
     aggregate over shards (ShardedTieredLSM.stats).
+
+    The storage set is re-read from the DB at every accounting point
+    and keyed by object identity, because dynamic repartitioning
+    (core/shards.py Repartitioner) retires source shards and creates
+    destinations *mid-run*: retired slices stay listed by the DB (their
+    history, including migration reads, must stay in the window), and a
+    device born inside the window simply has no baseline — its whole
+    busy time belongs to the window.
     """
     fresh_value = wl.value_len
     n = len(wl.ops)
-    sts = _db_storages(db)
     tiers = ("FD", "SD")
     fd_lat = np.zeros(n if collect_latency else 0)
     sd_lat = np.zeros(n if collect_latency else 0)
     t10_start_ops = int(n * 0.9)
-    busy90 = {(si, t): 0.0 for si in range(len(sts)) for t in tiers}
+    busy90: dict = {}
     gets90 = hits90 = scanned90 = scan_hits90 = 0
+    # only a Repartitioner changes the storage set mid-run; without one
+    # the per-op latency loop can reuse one snapshot of the live slices
+    rep = getattr(db, "repartitioner", None)
+    static_sts = None if rep is not None else _live_storages(db)
+    # baseline for this run's repartition/migration deltas (the db's
+    # counters are cumulative since reset_storage)
+    rep0_events = (rep.n_splits + rep.n_merges) if rep is not None else 0
+    rep0_bytes = (rep.migrated_read_bytes + rep.migrated_write_bytes
+                  if rep is not None else 0)
     for j in range(n):
         if j == t10_start_ops:
-            busy90 = {(si, t): st.dev[t].busy
-                      for si, st in enumerate(sts) for t in tiers}
+            busy90 = {(id(st), t): st.dev[t].busy
+                      for st in _db_storages(db) for t in tiers}
             s = db.stats
             gets90 = s.gets
             hits90 = s.served_mem + s.served_fd + s.served_pc
@@ -145,8 +182,10 @@ def run_workload(db, wl: Workload, name: str = "?",
         op, key = int(wl.ops[j]), int(wl.keys[j])
         if op == OP_READ or op == OP_SCAN:
             if collect_latency:
-                f0 = [st.dev["FD"].fg_time for st in sts]
-                s0 = [st.dev["SD"].fg_time for st in sts]
+                base = static_sts if static_sts is not None \
+                    else _live_storages(db)
+                f0 = [(st, st.dev["FD"].fg_time, st.dev["SD"].fg_time)
+                      for st in base]
             if op == OP_READ:
                 db.get(key)
             else:
@@ -154,21 +193,32 @@ def run_workload(db, wl: Workload, name: str = "?",
             if collect_latency:
                 # shared-nothing: a fan-out op's shards serve in
                 # parallel, so its latency is the slowest shard's delta
-                # (for a point get only one shard moves — max == delta)
-                fd_lat[j] = max(st.dev["FD"].fg_time - f0[si]
-                                for si, st in enumerate(sts))
-                sd_lat[j] = max(st.dev["SD"].fg_time - s0[si]
-                                for si, st in enumerate(sts))
+                # (for a point get only one shard moves — max == delta).
+                # Dynamic topology: candidates = storages live at op
+                # start (a cutover inside the op may have retired one —
+                # its fg charges still belong to this op) plus any born
+                # during the op (baseline 0).
+                cand = f0
+                if static_sts is None:
+                    known = {id(st) for st, _, _ in f0}
+                    cand = f0 + [(st, 0.0, 0.0)
+                                 for st in _live_storages(db)
+                                 if id(st) not in known]
+                fd_lat[j] = max(st.dev["FD"].fg_time - b
+                                for st, b, _ in cand)
+                sd_lat[j] = max(st.dev["SD"].fg_time - b
+                                for st, _, b in cand)
         elif op == OP_INSERT:
             db.put(key, fresh_value)
         else:
             db.put(key, fresh_value)
+    sts = _db_storages(db)
     total = max(st.sim_time for st in sts)
     # Throughput = ops in window / bottleneck-device work in the window
     # (all devices of all shards serve concurrently; the busiest one
     # gates completion).
-    window = max(max(sts[si].dev[t].busy - busy90[(si, t)]
-                     for si in range(len(sts)) for t in tiers), 1e-12)
+    window = max(max(st.dev[t].busy - busy90.get((id(st), t), 0.0)
+                     for st in sts for t in tiers), 1e-12)
     thr = (n - t10_start_ops) / window
     # Tail latency (paper Fig. 8 metric: final 10% of the run): service
     # time inflated by steady-state device utilisation (M/M/1-style
@@ -178,8 +228,8 @@ def run_workload(db, wl: Workload, name: str = "?",
     if collect_latency:
         lat = np.zeros(n - t10_start_ops)
         for t, arr in (("FD", fd_lat), ("SD", sd_lat)):
-            busy_t = max(sts[si].dev[t].busy - busy90[(si, t)]
-                         for si in range(len(sts)))
+            busy_t = max(st.dev[t].busy - busy90.get((id(st), t), 0.0)
+                         for st in sts)
             rho = min(busy_t / window, 0.95)
             lat += arr[t10_start_ops:] / (1.0 - rho)
         window_reads = ((wl.ops[t10_start_ops:] == OP_READ)
@@ -202,6 +252,8 @@ def run_workload(db, wl: Workload, name: str = "?",
     # sharded DBs report the per-shard config and the HotBudget state
     shard_knobs = db.shard_knobs() if hasattr(db, "shard_knobs") else None
     eff_cfg = getattr(db, "shard_cfg", None) or db.cfg
+    # repartition events + migration cost (PR 5)
+    rep_snap = rep.snapshot() if rep is not None else None
     return RunResult(
         system=name, n_ops=n, sim_seconds=total,
         tail_window_seconds=window, throughput=thr,
@@ -212,8 +264,13 @@ def run_workload(db, wl: Workload, name: str = "?",
         scan_fd_hit_rate=scan_hit_final,
         scan_merge_ops_per_record=stats.scan_merge_ops_per_record,
         range_promo_frac=float(getattr(eff_cfg, "range_promo_frac", 0.0)),
-        n_shards=getattr(getattr(db, "scfg", None), "n_shards", 1),
-        shard_budget=shard_knobs)
+        n_shards=getattr(db, "n_shards", 1),
+        shard_budget=shard_knobs,
+        n_repartitions=(rep_snap["n_splits"] + rep_snap["n_merges"]
+                        - rep0_events if rep_snap else 0),
+        migration_bytes=(rep_snap["migrated_bytes"] - rep0_bytes
+                         if rep_snap else 0),
+        repartition=rep_snap)
 
 
 def bench_system(system: str, mix: str, dist, n_ops: int, value_len: int,

@@ -58,6 +58,31 @@ routes SD-served records into the promotion cache — per record when
 only isolated keys are hot, or as one whole-range batch when
 `RALT.range_hot_bytes` says the scanned SD range itself is hot (range
 promotion; see `TieredLSM._record_scan_hotness`).
+
+Invariants
+----------
+* **Get-equivalence** — for every key in the scanned range, the scan
+  yields exactly the version a point `get` of that key would return
+  against the same pinned Version (top-down-first-match; a tombstone
+  winner hides the key).  The model-based oracle in
+  tests/test_scan.py enforces this for every source combination.
+* **Pinned snapshot** — all SSTable-backed sources of one scan come
+  from the single Version captured at entry; installs racing the scan
+  publish new Versions and never perturb live cursors.
+* **View-cache signature** — a GroupView source is valid for exactly
+  the group composition its signature names (tuple of per-run sid
+  tuples); `ViewCache` may therefore serve one view to every query —
+  and every Version — with that composition, and must never serve it
+  after the group changed (a fresh signature simply misses).
+* **Charging** — heap-mode cursors charge every data block they enter;
+  view-mode cursors charge only blocks holding served winners; both
+  charge a (sstable, block) pair at most once per scan, through the
+  engine callback so baselines can interpose their caches.
+
+Paper mapping: scans extend HotRAP's read path (the paper is
+point-get only); the §3.3 touched-SSTable check runs per promoted
+record via `Version.sd_touched_many`, and the merged-view design
+follows REMIX (Zhong et al. 2020).
 """
 from __future__ import annotations
 

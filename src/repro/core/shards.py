@@ -1,5 +1,6 @@
 """Shared-nothing sharded engine: keyspace-partitioned ``TieredLSM``
-shards, a batched router, and a cluster-scope hot-budget arbiter.
+shards, a batched router, a cluster-scope hot-budget arbiter, and
+dynamic repartitioning with live migration.
 
 Why sharding, and why here
 --------------------------
@@ -15,8 +16,8 @@ byte budgets), and no object is ever shared between shards, so each
 shard could run on its own core/machine with no locks.  The only
 cluster-wide state is the router's monotonic sequence counter (so the
 sharded store assigns the same seq a single engine would — results are
-byte-identical to an unsharded oracle) and the ``HotBudget`` arbiter
-below.
+byte-identical to an unsharded oracle), the ``HotBudget`` arbiter, and
+the ``Repartitioner`` below.
 
 The router
 ----------
@@ -51,13 +52,67 @@ autotuner keeps running *within* the cluster-assigned envelope.
 Relative scaling preserves whatever the per-shard autotuner has learned
 between rebalances instead of resetting it.
 
-Equivalence contract (tests/test_shards.py)
--------------------------------------------
-For any N and either partitioning, ``put``/``delete`` return the same
-seq and ``get``/``scan``/``scan_range`` return byte-identical results
-to a single unsharded ``TieredLSM`` fed the same op stream.  Placement
-(which tier a record lives on, what HotBudget awards) never leaks into
-visibility — only into the simulated I/O accounting.
+``Repartitioner``: split/merge hot partitions with live migration
+-----------------------------------------------------------------
+Re-budgeting has a ceiling: ``HotBudget`` can hand a hot shard more FD
+bytes, but all of that shard's traffic still funnels through *one*
+device pair, so under contiguous skew (a hotspot that lives — or walks
+— inside a single range partition) the cluster is gated by a single
+shard while its neighbours idle.  The ``Repartitioner`` removes the
+gate by changing the partition map itself, the workload-adaptive
+reorganization move of Real-Time LSM-Trees (Saxena et al.) lifted to
+cluster scope:
+
+* **split** — when a shard's demand exceeds ``split_factor`` x the
+  fair share, its range divides at the *median hot key* (from the
+  shard's RALT), so the heat — not just the data — lands half on each
+  child and two device pairs serve what one did before;
+* **merge** — the coldest adjacent pair whose combined demand is below
+  ``merge_factor`` x two fair shares collapses into one shard; paired
+  with a split this keeps the shard count (and hence total simulated
+  hardware) constant, and alone it keeps the count within
+  ``[min_shards, max_shards]``.
+
+Migration is *live*: starting a job pins the source shards' Versions
+(refcounted, core/version.py) and streams their bytes in batches of
+``migration_records_per_op`` per router op — sequential reads charged
+against the source devices — while reads and writes keep routing
+through the old partition map.  The cutover then happens atomically
+between two router ops: destination shards are built from the sources'
+*current* state (FD/SD ``GroupView`` winner streams via
+``GroupView.live_arrays``, memtables folded newest-wins, the mutable
+promotion cache carried over), the installed SSTable bytes are charged
+as sequential writes on the destination devices, the source RALT's hot
+set is transplanted (``RALT.seed_records``) so the children do not look
+stone cold to the next trigger check, the new boundary list replaces
+the old in one splice, and ``HotBudget`` shares are re-mapped onto the
+new topology (split shares divide between the children by record
+count, merged shares sum).  Retired source shards stay visible to the
+time accounting — their ``StorageSim`` slices and op ``Stats`` are
+folded into the router's aggregate — so migration cost is never
+dropped on the floor.
+
+Invariants (tests/test_shards.py, tests/test_repartition.py)
+------------------------------------------------------------
+* **Oracle equivalence** — for any N and either partitioning, with or
+  without the arbiter and across any number of splits/merges,
+  ``put``/``delete`` return the same seq and ``get``/``scan``/
+  ``scan_range``/``multi_get`` return byte-identical results to a
+  single unsharded ``TieredLSM`` fed the same op stream.  Placement
+  (which tier a record lives on, what HotBudget awards, where the
+  partition boundaries sit) never leaks into visibility — only into
+  the simulated I/O accounting.
+* **Map atomicity** — every op observes a partition map with strictly
+  increasing boundaries covering the whole keyspace; topology edits
+  happen only between router ops, never inside one.
+* **Accounting continuity** — retiring a shard folds its ``Stats``
+  into the aggregate and parks its ``StorageSim`` in
+  ``_retired_storages``; cluster totals are monotone across
+  repartitions.
+* **Hash no-op** — hash partitioning spreads contiguous skew by
+  construction, so the ``Repartitioner`` deliberately declines to act
+  on hash clusters (counted in ``incompatible_checks``) rather than
+  splitting a range that hashing already scattered.
 """
 from __future__ import annotations
 
@@ -68,14 +123,16 @@ import heapq
 import numpy as np
 
 from .lsm import LSMConfig, Stats, TieredLSM
+from .scan import MAX_KEY
+from .sstable import KEY_BYTES, TOMBSTONE_VLEN, split_into_sstables
 
 _HASH_MULT = np.uint64(0x9E3779B97F4A7C15)
 
 
 @dataclasses.dataclass
 class ShardConfig:
-    """Cluster shape + hot-budget arbiter knobs."""
-    n_shards: int = 4
+    """Cluster shape + hot-budget arbiter + repartitioner knobs."""
+    n_shards: int = 4                    # initial shard count
     partitioning: str = "hash"           # "hash" | "range"
     key_space: int = 2 ** 62             # range partitioning: keys are
                                          # split evenly over [0, key_space)
@@ -88,12 +145,29 @@ class ShardConfig:
     # --- per-shard resource split floors ---
     memtable_floor: int = 64 * 1024
     block_cache_floor: int = 16 * 1024
+    # --- dynamic repartitioning (range partitioning only) ---
+    repartition: bool = False
+    min_shards: int = 2                  # merges never go below
+    max_shards: int = 8                  # splits never go above
+    repartition_interval_ops: int = 8192  # ops between trigger checks
+    repartition_cooldown_ops: int = 2048  # quiet period after a cutover
+    split_factor: float = 2.0            # demand > factor x fair -> split
+    merge_factor: float = 0.5            # pair demand < factor x 2 fair
+    migration_records_per_op: int = 256  # pre-copy stream rate
+    demand_signal: str = "auto"          # "auto" | "hot_bytes" | "fd_used"
+                                         # | "fg_util"
 
     def __post_init__(self):
         if self.partitioning not in ("hash", "range"):
             raise ValueError(f"unknown partitioning {self.partitioning!r}")
         if self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if self.min_shards < 1 or self.max_shards < self.min_shards:
+            raise ValueError("need 1 <= min_shards <= max_shards")
+        if self.demand_signal not in ("auto", "hot_bytes", "fd_used",
+                                      "fg_util"):
+            raise ValueError(f"unknown demand_signal "
+                             f"{self.demand_signal!r}")
 
 
 def shard_lsm_config(cfg: LSMConfig, scfg: ShardConfig) -> LSMConfig:
@@ -104,7 +178,9 @@ def shard_lsm_config(cfg: LSMConfig, scfg: ShardConfig) -> LSMConfig:
     small floors so tiny test configs stay runnable; structural knobs
     (size ratio, SSTable target, level count, HotRAP flags) are
     inherited unchanged.  The RALT budgets are fractions of fd_size and
-    scale automatically.
+    scale automatically.  N is the *initial* shard count: repartitioned
+    shards are built from the same 1/N template, so a paired
+    split+merge conserves the cluster's total simulated hardware.
     """
     n = scfg.n_shards
     if n == 1:
@@ -119,6 +195,37 @@ def shard_lsm_config(cfg: LSMConfig, scfg: ShardConfig) -> LSMConfig:
     )
 
 
+def shard_demand(shard: TieredLSM, signal: str, state: dict) -> float:
+    """One shard's fast-disk demand under the configured signal.
+
+    "auto" is the paper-native choice: the RALT hot-set size estimate
+    (§3.2's "does the hot set fit FD") when the shard runs HotRAP, FD
+    occupancy otherwise.  "fg_util" is the engine-agnostic alternative
+    the ROADMAP asks for — foreground device busy-time accumulated
+    since the caller's previous probe (``state`` keys shards by id) —
+    which also covers non-HotRAP baselines.
+    """
+    if signal == "fg_util":
+        busy = sum(d.fg_time for d in shard.storage.dev.values())
+        prev = state.get(id(shard), 0.0)
+        state[id(shard)] = busy
+        return max(busy - prev, 0.0)
+    if shard.ralt is not None and signal in ("auto", "hot_bytes"):
+        return float(shard.ralt.hot_set_bytes)
+    if signal == "hot_bytes":
+        return 0.0
+    return float(shard.fd_used_bytes())
+
+
+def _prune_probe_state(state: dict, shards: list) -> dict:
+    """Drop fg_util baselines of shards that are no longer live.  The
+    dict is id()-keyed; without pruning, a freed shard's entry could be
+    inherited by a later allocation reusing the same address, making a
+    fresh hot shard read as zero demand."""
+    live = {id(s) for s in shards}
+    return {k: v for k, v in state.items() if k in live}
+
+
 class HotBudget:
     """Cluster-scope FD-budget arbiter (paper §3.7, Alg. 1 analogue).
 
@@ -128,6 +235,8 @@ class HotBudget:
     1/N), and applies each shard's new envelope *relatively*: FD level
     caps and RALT limits scale by (new_share / old_share), so the
     per-shard autotuner's adjustments between rebalances are preserved.
+    ``retopology`` re-maps the state when the Repartitioner changes the
+    shard set.
     """
 
     def __init__(self, scfg: ShardConfig, shards: list[TieredLSM]):
@@ -136,17 +245,14 @@ class HotBudget:
         n = len(shards)
         self.shares = np.full(n, 1.0 / n)
         self._scale = np.ones(n)          # applied share * N per shard
+        self._probe_state: dict = {}      # fg_util demand deltas
         self.n_rebalances = 0
         self.total_shift = 0.0            # cumulative |share| mass moved
 
     # ------------------------------------------------------------------
     def _demand(self, shard: TieredLSM) -> float:
-        """Per-shard fast-disk demand: the RALT hot-set size estimate
-        when the shard runs HotRAP (the paper's own "does the hot set
-        fit FD" signal), FD occupancy otherwise."""
-        if shard.ralt is not None:
-            return float(shard.ralt.hot_set_bytes)
-        return float(shard.fd_used_bytes())
+        return shard_demand(shard, self.scfg.demand_signal,
+                            self._probe_state)
 
     def rebalance(self) -> np.ndarray:
         """One arbitration round; returns the new share vector."""
@@ -199,6 +305,42 @@ class HotBudget:
                                   ralt.cfg.buffer_bytes)
         self._scale[i] = new_scale
 
+    def retopology(self, shares: np.ndarray, scales: np.ndarray) -> None:
+        """Re-map arbiter state onto a repartitioned shard list.
+
+        The Repartitioner hands over per-shard shares (a split share
+        divided between the children, merged shares summed, surviving
+        shards unchanged) and applied scales (1.0 for freshly built
+        shards — they start at the fair 1/N envelope — and the old
+        applied scale for survivors).  Shares are re-clamped to the
+        [min_share, max_share] x fair corridor, renormalised, and every
+        shard's envelope is re-applied relative to its scale, so a hot
+        child receives its FD award immediately instead of waiting one
+        rebalance interval."""
+        n = len(self.shards)
+        fair = 1.0 / n
+        shares = np.clip(np.asarray(shares, dtype=float),
+                         self.scfg.min_share * fair,
+                         self.scfg.max_share * fair)
+        shares /= shares.sum()
+        self.shares = shares
+        self._scale = np.asarray(scales, dtype=float)
+        # keep survivors' fg_util probe baselines (wiping them would
+        # make the next rebalance read lifetime busy for survivors vs
+        # near-zero for the fresh children); pruning dead ids also
+        # prevents a recycled id() from inheriting a stale baseline
+        self._probe_state = _prune_probe_state(self._probe_state,
+                                               self.shards)
+        for i, shard in enumerate(self.shards):
+            self._apply(i, shard)
+
+    def __getstate__(self):
+        """Pickle without the id()-keyed probe baselines (ids do not
+        survive the round-trip)."""
+        state = self.__dict__.copy()
+        state["_probe_state"] = {}
+        return state
+
     def snapshot(self) -> dict:
         """Arbiter state for RunResult / benchmark JSON."""
         return {
@@ -212,26 +354,495 @@ class HotBudget:
         }
 
 
+@dataclasses.dataclass
+class _MigrationJob:
+    """One in-flight repartition: the op list, the pinned source
+    Versions, and the pre-copy stream plan/progress."""
+    ops: list                 # ("split", shard, key) | ("merge", a, b)
+    pins: list                # pinned source Versions (refcounted)
+    segments: list            # per-(shard, tier) stream segments
+    plan_records: int
+    done_records: int = 0
+
+
+class Repartitioner:
+    """Range split/merge of shards with batched live migration.
+
+    Driven from the router's ``_account_ops`` (the same between-ops
+    hook the HotBudget rebalance uses): every ``repartition_interval_
+    ops`` it probes per-shard demand and may start a migration job; an
+    active job streams ``migration_records_per_op`` records per router
+    op (charging sequential reads on the source devices) and, once the
+    pinned snapshot is fully streamed, performs the atomic cutover.
+    See the module docstring for the full protocol and invariants.
+    """
+
+    def __init__(self, scfg: ShardConfig, router: "ShardedTieredLSM"):
+        self.scfg = scfg
+        self.router = router
+        self._job: _MigrationJob | None = None
+        self._ops_since_check = 0
+        self._cooldown = 0
+        self._probe_state: dict = {}
+        self.total_ops = 0
+        self.n_checks = 0
+        self.incompatible_checks = 0      # trigger checks on hash clusters
+        self.n_splits = 0
+        self.n_merges = 0
+        self.migrated_records = 0
+        self.migrated_read_bytes = 0
+        self.migrated_write_bytes = 0
+        self.events: list[dict] = []
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+    def on_ops(self, n: int) -> None:
+        self.total_ops += n
+        if self._job is not None:
+            self._advance(n * self.scfg.migration_records_per_op)
+            return
+        if self._cooldown > 0:
+            self._cooldown = max(0, self._cooldown - n)
+            return
+        self._ops_since_check += n
+        if self._ops_since_check >= self.scfg.repartition_interval_ops:
+            self._ops_since_check = 0
+            self._check_triggers()
+
+    def drain(self) -> None:
+        """Run the active migration (if any) to completion (tests,
+        stage boundaries in benchmarks)."""
+        while self._job is not None:
+            self._advance(max(self._job.plan_records, 1))
+
+    def reset(self) -> None:
+        """Fresh counters/events for run-phase-only measurement; keeps
+        the current topology and cancels any in-flight job."""
+        if self._job is not None:
+            for v in self._job.pins:
+                v.unref()
+            self._job = None
+        self.total_ops = 0
+        self.n_checks = 0
+        self.incompatible_checks = 0
+        self.n_splits = 0
+        self.n_merges = 0
+        self.migrated_records = 0
+        self.migrated_read_bytes = 0
+        self.migrated_write_bytes = 0
+        self.events = []
+        self._ops_since_check = 0
+        self._cooldown = 0
+        self._probe_state = {}            # storages were reset too
+
+    def __getstate__(self):
+        """Pickle without the id()-keyed probe baselines (ids do not
+        survive the round-trip)."""
+        state = self.__dict__.copy()
+        state["_probe_state"] = {}
+        return state
+
+    # ------------------------------------------------------------------
+    # triggers
+    # ------------------------------------------------------------------
+    def _demand(self, shard: TieredLSM) -> float:
+        return shard_demand(shard, self.scfg.demand_signal,
+                            self._probe_state)
+
+    def _check_triggers(self) -> None:
+        self.n_checks += 1
+        r = self.router
+        if r.scfg.partitioning != "range":
+            # hash partitioning already scatters contiguous skew; range
+            # surgery on a hashed keyspace would be meaningless.
+            self.incompatible_checks += 1
+            return
+        n = len(r.shards)
+        demands = np.array([self._demand(s) for s in r.shards], dtype=float)
+        total = float(demands.sum())
+        if total <= 0.0:
+            return
+        fair = total / n
+        hot = int(np.argmax(demands))
+        split_key = None
+        # n == 1: any demand exceeds "fair" by definition (demand ==
+        # total == fair would make the relative trigger unreachable);
+        # a loaded single shard always benefits from a second device
+        overloaded = (demands[hot] > 0.0 if n == 1
+                      else demands[hot] > self.scfg.split_factor * fair)
+        if overloaded:
+            split_key = self._choose_split_key(hot)
+        # coldest adjacent pair, excluding the split target
+        merge_i = None
+        if n >= 2:
+            pair_sums = demands[:-1] + demands[1:]
+            for i in np.argsort(pair_sums):
+                i = int(i)
+                if split_key is not None and hot in (i, i + 1):
+                    continue
+                if pair_sums[i] < self.scfg.merge_factor * 2.0 * fair:
+                    merge_i = i
+                break                     # only the coldest eligible pair
+        ops = []
+        if split_key is not None and merge_i is not None:
+            # paired split+merge: shard count (= simulated hardware)
+            # stays constant — the boundary moves toward the heat
+            ops = [("split", r.shards[hot], split_key),
+                   ("merge", r.shards[merge_i], r.shards[merge_i + 1])]
+        elif split_key is not None and n + 1 <= self.scfg.max_shards:
+            ops = [("split", r.shards[hot], split_key)]
+        elif merge_i is not None and n - 1 >= self.scfg.min_shards:
+            ops = [("merge", r.shards[merge_i], r.shards[merge_i + 1])]
+        if ops:
+            self._start(ops)
+
+    def _choose_split_key(self, i: int) -> int | None:
+        """Split point for shard i: the median *hot* key (halving the
+        heat, not just the data, spreads the hot traffic over both
+        children's devices), falling back to the median record key.
+        Returns None when the shard cannot be split (fewer than two
+        distinct keys)."""
+        r = self.router
+        lo, hi = r.shard_bounds(i)
+        sh = r.shards[i]
+        if sh.ralt is not None:
+            hot_keys, _ = sh.ralt.scan_hot(lo, hi)
+            if len(hot_keys) >= 8:
+                return int(hot_keys[len(hot_keys) // 2])
+        v = sh.version
+        fd = sh.group_view(v, "FD")
+        sd = sh.group_view(v, "SD")
+        keys = np.union1d(fd.keys, sd.keys)
+        if sh.memtable or sh.imm_memtables:
+            mem_keys = [k for m in (sh.memtable, *sh.imm_memtables)
+                        for k in m]
+            keys = np.union1d(keys, np.array(mem_keys, dtype=np.uint64))
+        if len(keys) < 2:
+            return None
+        return int(keys[len(keys) // 2])
+
+    # ------------------------------------------------------------------
+    # test / benchmark hooks
+    # ------------------------------------------------------------------
+    def force_split(self, i: int, split_key: int | None = None) -> bool:
+        """Start a split of shard i immediately (deterministic tests)."""
+        if self._job is not None or self.router.scfg.partitioning != "range":
+            return False
+        if split_key is None:
+            split_key = self._choose_split_key(i)
+        if split_key is None:
+            return False
+        lo, hi = self.router.shard_bounds(i)
+        if not lo < split_key <= hi:
+            return False
+        self._start([("split", self.router.shards[i], split_key)])
+        return True
+
+    def force_merge(self, i: int) -> bool:
+        """Start a merge of shards i and i+1 immediately."""
+        r = self.router
+        if (self._job is not None or r.scfg.partitioning != "range"
+                or i + 1 >= len(r.shards)):
+            return False
+        self._start([("merge", r.shards[i], r.shards[i + 1])])
+        return True
+
+    # ------------------------------------------------------------------
+    # migration job
+    # ------------------------------------------------------------------
+    def _sources(self, ops) -> list[TieredLSM]:
+        out: list[TieredLSM] = []
+        for op in ops:
+            for sh in op[1:]:
+                if isinstance(sh, TieredLSM) and sh not in out:
+                    out.append(sh)
+        return out
+
+    def _start(self, ops: list) -> None:
+        pins, segments, plan = [], [], 0
+        for sh in self._sources(ops):
+            v = sh.version.ref()          # pin: the pre-copy stream's
+            pins.append(v)                # snapshot survives installs
+            for group in ("FD", "SD"):
+                n_rec, n_bytes = v.group_stats(group, sh.cfg.n_fd_levels)
+                if n_rec:
+                    segments.append({"storage": sh.storage, "tier": group,
+                                     "bytes": n_bytes, "records": n_rec,
+                                     "done": 0, "charged": 0})
+                    plan += n_rec
+        self._job = _MigrationJob(ops=ops, pins=pins, segments=segments,
+                                  plan_records=plan)
+        if plan == 0:                     # empty sources: cut over now
+            self._cutover()
+
+    def _advance(self, k: int) -> None:
+        """Stream up to k records of the pinned snapshot: sequential
+        reads charged against the source devices, proportional to the
+        segment's bytes."""
+        job = self._job
+        remaining = k
+        for seg in job.segments:
+            if remaining <= 0:
+                break
+            take = min(remaining, seg["records"] - seg["done"])
+            if take <= 0:
+                continue
+            seg["done"] += take
+            target = int(seg["bytes"] * seg["done"] / seg["records"])
+            delta = target - seg["charged"]
+            if delta > 0:
+                seg["charged"] = target
+                seg["storage"].seq_read(seg["tier"], delta, fg=False,
+                                        component="migration")
+                self.migrated_read_bytes += delta
+            remaining -= take
+        job.done_records = min(job.done_records + k, job.plan_records)
+        if job.done_records >= job.plan_records:
+            self._cutover()
+
+    # -- cutover -------------------------------------------------------
+    @staticmethod
+    def _extract(shard: TieredLSM):
+        """A shard's full visible state as sequential streams: the FD
+        and SD group winner arrays (via the cached GroupViews), the
+        memtables folded newest-wins into one dict, and the mPC."""
+        v = shard.version
+        fd = shard.group_view(v, "FD").live_arrays()
+        sd = shard.group_view(v, "SD").live_arrays()
+        mem: dict[int, tuple[int, int]] = {}
+        for m in reversed(shard.imm_memtables):   # oldest first
+            mem.update(m)
+        mem.update(shard.memtable)
+        return fd, sd, mem, dict(shard.mpc.data)
+
+    @staticmethod
+    def _partition(rec, mem, mpc, p: int):
+        """Split extracted state at key p into (< p, >= p) halves."""
+        (fd, sd) = rec
+        out = []
+        for keys, seqs, vlens in (fd, sd):
+            i = int(np.searchsorted(keys, np.uint64(p), "left"))
+            out.append(((keys[:i], seqs[:i], vlens[:i]),
+                        (keys[i:], seqs[i:], vlens[i:])))
+        mem_a = {k: v for k, v in mem.items() if k < p}
+        mem_b = {k: v for k, v in mem.items() if k >= p}
+        mpc_a = {k: v for k, v in mpc.items() if k < p}
+        mpc_b = {k: v for k, v in mpc.items() if k >= p}
+        return ((out[0][0], out[1][0], mem_a, mpc_a),
+                (out[0][1], out[1][1], mem_b, mpc_b))
+
+    @staticmethod
+    def _concat(parts):
+        """Concatenate extracted states of *adjacent* shards (disjoint
+        ascending key ranges, so concatenation preserves sort order)."""
+        fd = tuple(np.concatenate([p[0][i] for p in parts])
+                   for i in range(3))
+        sd = tuple(np.concatenate([p[1][i] for p in parts])
+                   for i in range(3))
+        mem: dict = {}
+        mpc: dict = {}
+        for p in parts:
+            mem.update(p[2])
+            mpc.update(p[3])
+        return fd, sd, mem, mpc
+
+    def _build(self, fd_rec, sd_rec, mem, mpc, key_range,
+               sources: list[TieredLSM]) -> tuple[TieredLSM, int]:
+        """Materialise one destination shard from extracted streams.
+
+        Group winners install as single sorted runs — the FD stream in
+        the last FD level, the SD stream in the last level — publishing
+        one Version; install bytes are charged as sequential writes on
+        the (fresh) destination devices.  The sources' RALT hot sets in
+        the destination range are transplanted, then a compaction pass
+        restores the level-cap invariants (with the seeded RALT, the
+        boundary compaction retains the inherited hot set on FD)."""
+        r = self.router
+        sh = r._new_shard()
+        levels: list[list] = [[] for _ in sh.caps]
+        # last FD level (clamped: all-FD baselines have no SD levels)
+        fd_li = min(sh.cfg.n_fd_levels, len(levels)) - 1
+        wrote = 0
+        if len(fd_rec[0]):
+            ssts = split_into_sstables(*fd_rec, "FD", fd_li, sh.now,
+                                       sh.cfg.target_sstable_bytes)
+            levels[fd_li] = ssts
+            nb = sum(s.size_bytes for s in ssts)
+            sh.storage.seq_write("FD", nb, fg=False, component="migration")
+            wrote += nb
+        if len(sd_rec[0]):
+            last = len(levels) - 1
+            ssts = split_into_sstables(*sd_rec, "SD", last, sh.now,
+                                       sh.cfg.target_sstable_bytes)
+            levels[last] = ssts
+            nb = sum(s.size_bytes for s in ssts)
+            sh.storage.seq_write("SD", nb, fg=False, component="migration")
+            wrote += nb
+        sh._publish(levels)
+        sh.memtable = dict(mem)
+        sh.memtable_bytes = sum(
+            KEY_BYTES + (0 if vlen == TOMBSTONE_VLEN else vlen)
+            for _, vlen in mem.values())
+        for k, (seq, vlen) in mpc.items():
+            sh.mpc.insert(k, seq, vlen, KEY_BYTES)
+        if sh.ralt is not None:
+            lo, hi = key_range
+            for src in sources:
+                if src.ralt is None:
+                    continue
+                hot_keys, hot_vlens = src.ralt.scan_hot(lo, hi)
+                if len(hot_keys):
+                    sh.ralt.seed_records(hot_keys, hot_vlens)
+        sh._maybe_compact()
+        n_rec = len(fd_rec[0]) + len(sd_rec[0]) + len(mem)
+        self.migrated_records += n_rec
+        self.migrated_write_bytes += wrote
+        return sh, n_rec
+
+    def _retire(self, shard: TieredLSM) -> None:
+        """Drop a source shard while keeping the books: pending checker
+        superversions are released (their promotions are abandoned —
+        placement only, never visibility), the engine's Version pin is
+        dropped, and the shard's Stats/StorageSim stay in the cluster
+        aggregate."""
+        for immpc in shard.immpcs:
+            immpc.sv.release()            # idempotent: queue dups are fine
+        for _, immpc in shard._checker_queue:
+            immpc.sv.release()
+        shard.immpcs = []
+        shard._checker_queue = []
+        shard.version.unref()
+        self.router._fold_retired(shard)
+
+    def _cutover(self) -> None:
+        """Atomic topology install: between two router ops, replace the
+        source shards and boundary entries with the freshly built
+        destinations and re-map the HotBudget shares."""
+        job = self._job
+        self._job = None
+        r = self.router
+        shares = scales = None
+        if r.hot_budget is not None:
+            shares = [float(s) for s in r.hot_budget.shares]
+            scales = [float(s) for s in r.hot_budget._scale]
+        detail = []
+        remaining = list(job.ops)
+        while remaining:
+            # apply highest-index op first so lower indices stay valid
+            op = max(remaining, key=lambda o: r.shards.index(o[1]))
+            remaining.remove(op)
+            idx = r.shards.index(op[1])
+            if op[0] == "split":
+                shard, p = op[1], op[2]
+                lo, hi = r.shard_bounds(idx)
+                fd, sd, mem, mpc = self._extract(shard)
+                part_a, part_b = self._partition((fd, sd), mem, mpc, p)
+                sh_a, n_a = self._build(*part_a, (lo, p - 1), [shard])
+                sh_b, n_b = self._build(*part_b, (p, hi), [shard])
+                self._retire(shard)
+                r.shards[idx:idx + 1] = [sh_a, sh_b]
+                r._bounds_list.insert(idx, p)
+                if shares is not None:
+                    s = shares.pop(idx)
+                    scales.pop(idx)
+                    tot = max(n_a + n_b, 1)
+                    shares[idx:idx] = [s * n_a / tot, s * n_b / tot]
+                    scales[idx:idx] = [1.0, 1.0]
+                self.n_splits += 1
+                detail.append({"kind": "split", "at": idx, "key": int(p),
+                               "records": n_a + n_b})
+            else:
+                a, b = op[1], op[2]
+                assert r.shards[idx + 1] is b, "merge pair not adjacent"
+                lo, _ = r.shard_bounds(idx)
+                _, hi = r.shard_bounds(idx + 1)
+                parts = [self._extract(a), self._extract(b)]
+                fd, sd, mem, mpc = self._concat(parts)
+                sh_c, n_c = self._build(fd, sd, mem, mpc, (lo, hi), [a, b])
+                self._retire(a)
+                self._retire(b)
+                r.shards[idx:idx + 2] = [sh_c]
+                del r._bounds_list[idx]
+                if shares is not None:
+                    s = shares.pop(idx) + shares.pop(idx)
+                    scales.pop(idx)
+                    scales.pop(idx)
+                    shares.insert(idx, s)
+                    scales.insert(idx, 1.0)
+                self.n_merges += 1
+                detail.append({"kind": "merge", "at": idx,
+                               "records": n_c})
+        r._bounds = np.array(r._bounds_list, dtype=np.uint64)
+        for v in job.pins:
+            v.unref()
+        if r.hot_budget is not None:
+            r.hot_budget.retopology(np.array(shares), np.array(scales))
+        elif r.scfg.hot_budget and len(r.shards) > 1:
+            # a cluster that *started* single-shard had no arbiter to
+            # create at __init__; growing past one shard brings the
+            # configured arbitration online (fair initial shares)
+            r.hot_budget = HotBudget(r.scfg, r.shards)
+        self._probe_state = _prune_probe_state(self._probe_state, r.shards)
+        self._cooldown = self.scfg.repartition_cooldown_ops
+        self._ops_since_check = 0
+        self.events.append({
+            "ops": detail, "at_op": self.total_ops,
+            "n_shards": len(r.shards),
+            "bounds": [int(b) for b in r._bounds_list]})
+
+    # ------------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Repartitioner state for RunResult / benchmark JSON."""
+        return {
+            "n_splits": self.n_splits,
+            "n_merges": self.n_merges,
+            "n_checks": self.n_checks,
+            "incompatible_checks": self.incompatible_checks,
+            "migrated_records": self.migrated_records,
+            "migrated_read_bytes": self.migrated_read_bytes,
+            "migrated_write_bytes": self.migrated_write_bytes,
+            "migrated_bytes": (self.migrated_read_bytes
+                               + self.migrated_write_bytes),
+            "active": self._job is not None,
+            "n_shards": len(self.router.shards),
+            "bounds": [int(b) for b in self.router._bounds_list],
+            "events": self.events[-16:],
+            "min_shards": self.scfg.min_shards,
+            "max_shards": self.scfg.max_shards,
+            "split_factor": self.scfg.split_factor,
+            "merge_factor": self.scfg.merge_factor,
+            "interval_ops": self.scfg.repartition_interval_ops,
+        }
+
+
 class ShardedTieredLSM:
     """N shared-nothing ``TieredLSM`` shards behind one router.
 
     Public API mirrors ``TieredLSM`` (`put`/`get`/`delete`/`scan`/
     `scan_range`/`flush_all`) plus the batched ``multi_get``.  ``stats``
     aggregates the per-shard ``Stats`` field-wise; ``storages`` exposes
-    the per-shard ``StorageSim`` slices for the runner's shared-nothing
-    time accounting (shards run in parallel — the wall clock is the
-    busiest shard's, see core/runner.py).
+    the per-shard ``StorageSim`` slices — including those of shards
+    retired by repartitioning — for the runner's shared-nothing time
+    accounting (shards run in parallel — the wall clock is the busiest
+    shard's, see core/runner.py).  The shard list and boundary array
+    are mutated only by the ``Repartitioner``'s cutover, between router
+    ops.
     """
 
     def __init__(self, scfg: ShardConfig, cfg: LSMConfig,
-                 factory=None, seed: int = 0):
+                 factory=None, seed: int = 0, system: str | None = None):
         self.scfg = scfg
         self.cfg = cfg                    # cluster-total config (template)
         self.shard_cfg = shard_lsm_config(cfg, scfg)
-        if factory is None:
-            factory = lambda sub_cfg, s: TieredLSM(sub_cfg, seed=s)
-        self.shards: list[TieredLSM] = [
-            factory(self.shard_cfg, seed + i) for i in range(scfg.n_shards)]
+        # shard construction: a system name (picklable, survives the
+        # DB_CACHE round-trip) or an explicit factory(sub_cfg, seed)
+        self._system = system
+        self._factory = factory
+        self._had_factory = factory is not None
+        self._seed_counter = seed
+        self.shards: list[TieredLSM] = [self._new_shard()
+                                        for _ in range(scfg.n_shards)]
         n = scfg.n_shards
         # range partitioning: shard i owns [i*key_space/N, (i+1)*key_space/N)
         self._bounds_list = [(i + 1) * scfg.key_space // n
@@ -240,7 +851,10 @@ class ShardedTieredLSM:
         self.global_seq = 0               # cluster-wide sequence numbers
         self.hot_budget = (HotBudget(scfg, self.shards)
                            if scfg.hot_budget and n > 1 else None)
+        self.repartitioner = (Repartitioner(scfg, self)
+                              if scfg.repartition else None)
         self._ops_since_rebalance = 0
+        self._retired_storages: list = []
         # Router-level stat corrections (negative counters folded into
         # the aggregate): a fan-out scan runs one shard-scan per
         # participating shard and may overfetch records the merge then
@@ -249,7 +863,49 @@ class ShardedTieredLSM:
         # so they stay comparable to an unsharded store.  The I/O spent
         # on speculative overfetch stays charged (it is real work), as
         # do the per-shard merge/pull counters and RALT hotness.
+        # Retired shards' Stats also fold in here (accounting
+        # continuity across repartitions).
         self._corrections = Stats()
+
+    def _new_shard(self) -> TieredLSM:
+        seed = self._seed_counter
+        self._seed_counter += 1
+        if self._factory is not None:
+            return self._factory(self.shard_cfg, seed)
+        if self._system is not None:
+            from .baselines import make_system
+            return make_system(self._system, self.shard_cfg, seed=seed)
+        if self._had_factory:
+            # the factory did not survive pickling and no system name
+            # was given: refusing beats silently building a shard of
+            # the wrong engine into a mixed cluster
+            raise RuntimeError(
+                "cannot build a shard after unpickling a factory-"
+                "constructed ShardedTieredLSM; construct with system= "
+                "(see make_sharded_system) to repartition after a "
+                "pickle round-trip")
+        return TieredLSM(self.shard_cfg, seed=seed)
+
+    def __getstate__(self):
+        """Pickle without the (possibly lambda) factory; unpickled
+        clusters rebuild shards via the stored system name."""
+        state = self.__dict__.copy()
+        state["_factory"] = None
+        return state
+
+    @property
+    def n_shards(self) -> int:
+        """Current shard count (changes under repartitioning)."""
+        return len(self.shards)
+
+    def _fold_retired(self, shard: TieredLSM) -> None:
+        """Keep a retired shard's op stats and device history in the
+        cluster aggregate (called by Repartitioner._retire)."""
+        for f in dataclasses.fields(Stats):
+            setattr(self._corrections, f.name,
+                    getattr(self._corrections, f.name)
+                    + getattr(shard.stats, f.name))
+        self._retired_storages.append(shard.storage)
 
     # ------------------------------------------------------------------
     # routing
@@ -258,7 +914,7 @@ class ShardedTieredLSM:
         """Scalar key -> shard routing (per-op hot path: plain Python
         arithmetic, no numpy array round-trip; must agree with the
         vectorized `_shard_ids` bit-for-bit)."""
-        n = self.scfg.n_shards
+        n = len(self.shards)
         if n == 1:
             return 0
         if self.scfg.partitioning == "range":
@@ -267,7 +923,7 @@ class ShardedTieredLSM:
 
     def _shard_ids(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized key -> shard bucketing (the router hot path)."""
-        n = self.scfg.n_shards
+        n = len(self.shards)
         if n == 1:
             return np.zeros(len(keys), dtype=np.int64)
         keys = np.ascontiguousarray(keys, dtype=np.uint64)
@@ -277,13 +933,22 @@ class ShardedTieredLSM:
         h = (keys * _HASH_MULT) >> np.uint64(32)
         return (h % np.uint64(n)).astype(np.int64)
 
+    def shard_bounds(self, i: int) -> tuple[int, int]:
+        """Inclusive key range [lo, hi] owned by shard i (range
+        partitioning; the last shard is unbounded above)."""
+        lo = 0 if i == 0 else int(self._bounds_list[i - 1])
+        hi = (MAX_KEY if i == len(self.shards) - 1
+              else int(self._bounds_list[i]) - 1)
+        return lo, hi
+
     def _account_ops(self, n: int) -> None:
-        if self.hot_budget is None:
-            return
-        self._ops_since_rebalance += n
-        if self._ops_since_rebalance >= self.scfg.rebalance_interval_ops:
-            self._ops_since_rebalance = 0
-            self.hot_budget.rebalance()
+        if self.hot_budget is not None:
+            self._ops_since_rebalance += n
+            if self._ops_since_rebalance >= self.scfg.rebalance_interval_ops:
+                self._ops_since_rebalance = 0
+                self.hot_budget.rebalance()
+        if self.repartitioner is not None:
+            self.repartitioner.on_ops(n)
 
     # ------------------------------------------------------------------
     # point ops
@@ -354,7 +1019,7 @@ class ShardedTieredLSM:
             # (each is asked for exactly the remainder — no overfetch)
             out: list[tuple[int, int, int]] = []
             calls = 0
-            for si in range(self.shard_of(lo), self.scfg.n_shards):
+            for si in range(self.shard_of(lo), len(self.shards)):
                 out.extend(self.shards[si].scan(lo, n - len(out)))
                 calls += 1
                 if len(out) >= n:
@@ -391,10 +1056,10 @@ class ShardedTieredLSM:
     @property
     def stats(self) -> Stats:
         """Field-wise sum of the per-shard Stats plus the router's
-        fan-out corrections (fresh object; derived rates recompute from
-        the summed counters).  Served-record scan metrics match what
-        the client saw; I/O and merge-work counters keep the full
-        speculative fan-out cost."""
+        fan-out corrections and retired-shard carryover (fresh object;
+        derived rates recompute from the summed counters).  Served-
+        record scan metrics match what the client saw; I/O and merge-
+        work counters keep the full speculative fan-out cost."""
         agg = Stats()
         for f in dataclasses.fields(Stats):
             total = getattr(self._corrections, f.name)
@@ -405,7 +1070,10 @@ class ShardedTieredLSM:
 
     @property
     def storages(self) -> list:
-        return [s.storage for s in self.shards]
+        """All device slices carrying this cluster's I/O history: the
+        live shards' plus those retired by repartitioning (so migration
+        cost and pre-cutover traffic stay in the time accounting)."""
+        return [s.storage for s in self.shards] + list(self._retired_storages)
 
     def flush_all(self) -> None:
         for shard in self.shards:
@@ -415,6 +1083,11 @@ class ShardedTieredLSM:
         for shard in self.shards:
             shard.reset_storage()
         self._corrections = Stats()
+        self._retired_storages = []
+        if self.hot_budget is not None:
+            self.hot_budget._probe_state = {}   # fresh devices: rebase
+        if self.repartitioner is not None:
+            self.repartitioner.reset()
 
     def fd_used_bytes(self) -> int:
         return sum(s.fd_used_bytes() for s in self.shards)
@@ -425,10 +1098,11 @@ class ShardedTieredLSM:
     def shard_knobs(self) -> dict:
         """Effective cluster/admission settings for RunResult output."""
         knobs = {
-            "n_shards": self.scfg.n_shards,
+            "n_shards": len(self.shards),
             "partitioning": self.scfg.partitioning,
             "range_promo_frac": self.shard_cfg.range_promo_frac,
             "hot_budget": self.hot_budget is not None,
+            "repartition": self.repartitioner is not None,
         }
         if self.hot_budget is not None:
             knobs.update(self.hot_budget.snapshot())

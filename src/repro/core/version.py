@@ -33,6 +33,29 @@ SSTable ids per run), so installs that do not change a group reuse the
 previous view untouched and a compaction invalidates exactly the group
 it rewrote — the build cost is amortised over every query between
 installs.
+
+Invariants
+----------
+* **Immutability** — a published Version's ``levels`` lists are never
+  mutated; every install builds fresh lists (``TieredLSM._publish``).
+  Readers and Checkers that captured a Version therefore see one
+  consistent SSTable set for their whole operation.
+* **Refcounted pinning** — ``refs`` counts the engine's current pointer
+  plus every frozen-immPC ``Superversion`` plus any in-flight shard
+  migration (``core/shards.py`` ``Repartitioner`` pins the source
+  shard's Version for the duration of the pre-copy stream).  A Version
+  with ``refs > 0`` must not be treated as reclaimable; ``release`` /
+  ``unref`` on every exit path keeps the count exact (tests assert it
+  returns to the engine-only count).
+* **Signature determinism** — SSTables are immutable and sids unique,
+  so a group signature fully determines its ``GroupView``; the
+  ``ViewCache`` may share one view across Versions and across queries
+  without revalidation.
+
+Paper mapping: Versions/Superversions implement the §3.3/§3.4
+concurrency argument ("the Checker searches the superversion it
+froze"); GroupViews adapt REMIX (Zhong et al. 2020) as the scan-side
+read path the §3.3 range-promotion check batches over.
 """
 from __future__ import annotations
 
@@ -121,6 +144,21 @@ class Version:
             return runs
         return [self.levels[li] for li in range(n_fd, len(self.levels))
                 if self.levels[li]]
+
+    def group_stats(self, group: str, n_fd: int) -> tuple[int, int]:
+        """(records, bytes) held by one level group — sizes the pre-copy
+        stream of a shard migration (core/shards.py) without building
+        the group's view."""
+        if group == "FD":
+            rng = range(0, min(n_fd, len(self.levels)))
+        else:
+            rng = range(n_fd, len(self.levels))
+        n_rec = n_bytes = 0
+        for li in rng:
+            for s in self.levels[li]:
+                n_rec += s.n
+                n_bytes += s.size_bytes
+        return n_rec, n_bytes
 
     def group_signature(self, group: str, n_fd: int) -> tuple:
         """Tuple of per-run sid tuples — identifies the group's exact
@@ -223,6 +261,13 @@ class GroupView:
         a = int(np.searchsorted(self.keys, np.uint64(lo), "left"))
         b = int(np.searchsorted(self.keys, np.uint64(hi), "right"))
         return a, b
+
+    def live_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The view's winner rows as (keys, seqs, vlens) array copies —
+        the sequential-stream form a shard migration installs into its
+        destination shard (tombstone winners included: they shadow
+        lower groups and must keep doing so after the move)."""
+        return self.keys.copy(), self.seqs.copy(), self.vlens.copy()
 
     def probes_replaced(self, key: int, winner_si: int | None) -> int:
         """How many table probes the per-level walk would have spent

@@ -1,0 +1,432 @@
+"""Dynamic repartitioning (core/shards.py Repartitioner): split/merge
+oracle equivalence under mid-workload triggers, partition-map atomicity
+against interleaved batched reads, migration-cost accounting, HotBudget
+retopology, shard-count bounds, RALT hotness handoff, and pickling.
+
+The contract under test: moving partition boundaries (with live
+migration of the affected shards) is invisible to clients — every
+``put``/``delete`` seq and every ``get``/``scan``/``scan_range``/
+``multi_get`` result stays byte-identical to an unsharded ``TieredLSM``
+fed the same op stream — while the migration's I/O cost is fully
+charged (sequential reads on the retired sources, sequential writes on
+the destinations) and surfaced through ``RunResult``.
+"""
+import dataclasses
+import io
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import (LSMConfig, ShardConfig, make_sharded_system,
+                        make_system)
+from repro.core.runner import run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+KIB = 1024
+MIB = 1024 * 1024
+KEYSPACE = 800
+
+
+def cluster_cfg(**kw):
+    base = dict(fd_size=512 * KIB, sd_size=4 * MIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16,
+                hotrap=True)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def repart_scfg(partitioning="range", **kw):
+    base = dict(n_shards=4, partitioning=partitioning, key_space=KEYSPACE,
+                repartition=True, repartition_interval_ops=300,
+                repartition_cooldown_ops=200, migration_records_per_op=64,
+                rebalance_interval_ops=250, memtable_floor=8 * KIB,
+                block_cache_floor=8 * KIB)
+    base.update(kw)
+    return ShardConfig(**base)
+
+
+def skewed_trace(db, oracle, n_ops=6000, seed=5, hot_quarter=0,
+                 hot_prob=0.7, keyspace=KEYSPACE):
+    """Drive both stores with one mixed stream whose point/scan keys
+    concentrate on one quarter of the keyspace (so range clusters grow
+    a hot shard), asserting byte-identical results at every op."""
+    rng = np.random.default_rng(seed)
+    q = keyspace // 4
+    for i in range(n_ops):
+        if rng.random() < hot_prob:
+            k = hot_quarter * q + int(rng.integers(0, q))
+        else:
+            k = int(rng.integers(0, keyspace))
+        r = rng.random()
+        if r < 0.50:
+            assert db.put(k, 100) == oracle.put(k, 100)
+        elif r < 0.60:
+            assert db.delete(k) == oracle.delete(k)
+        elif r < 0.80:
+            assert db.get(k) == oracle.get(k), (i, k)
+        elif r < 0.90:
+            lo, ln = int(rng.integers(0, keyspace)), int(rng.integers(1, 40))
+            assert db.scan(lo, ln) == oracle.scan(lo, ln), (i, lo, ln)
+        else:
+            lo = int(rng.integers(0, keyspace))
+            assert db.scan_range(lo, lo + 150) == oracle.scan_range(lo, lo + 150)
+
+
+def assert_map_consistent(db):
+    """Partition-map invariant: strictly increasing boundaries, one
+    fewer than shards, and scalar/vector routing agreement."""
+    bounds = db._bounds_list
+    assert len(bounds) == len(db.shards) - 1
+    assert all(bounds[i] < bounds[i + 1] for i in range(len(bounds) - 1))
+    keys = np.arange(0, KEYSPACE, 13, dtype=np.uint64)
+    assert [db.shard_of(int(k)) for k in keys] == db._shard_ids(keys).tolist()
+
+
+# ----------------------------------------------------------------------
+# oracle equivalence across mid-workload splits and merges
+# ----------------------------------------------------------------------
+def test_split_and_merge_oracle_equivalence_range():
+    """Contiguous skew on a range cluster must trigger >= 1 split and
+    >= 1 merge mid-workload without perturbing a single result."""
+    cfg = cluster_cfg()
+    db = make_sharded_system("hotrap", cfg, shard_cfg=repart_scfg(), seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    skewed_trace(db, oracle)
+    rep = db.repartitioner
+    assert rep.n_splits >= 1, rep.snapshot()
+    assert rep.n_merges >= 1, rep.snapshot()
+    assert_map_consistent(db)
+    # served-record accounting still matches the oracle (retired shards'
+    # stats folded into the aggregate)
+    s, o = db.stats, oracle.stats
+    assert s.scans == o.scans
+    assert s.scanned_records == o.scanned_records
+    assert (s.scan_served_mem + s.scan_served_fd + s.scan_served_pc
+            + s.scan_served_sd) == o.scanned_records
+
+
+def test_hash_cluster_repartition_is_noop():
+    """Hash partitioning scatters contiguous skew by construction; the
+    Repartitioner must decline (counted) and results must stay exact."""
+    cfg = cluster_cfg()
+    db = make_sharded_system("hotrap", cfg,
+                             shard_cfg=repart_scfg("hash"), seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    skewed_trace(db, oracle, n_ops=3000, seed=7)
+    rep = db.repartitioner
+    assert rep.incompatible_checks > 0
+    assert rep.n_splits == 0 and rep.n_merges == 0
+    assert len(db.shards) == 4
+    assert rep.force_split(0) is False     # explicit requests decline too
+    assert rep.force_merge(0) is False
+
+
+def test_forced_split_then_merge_roundtrip_equivalence():
+    """Deterministic split (chosen boundary) and merge back: every get
+    and scan over the whole keyspace must match the oracle at each
+    topology, and the boundary list must track the edits."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)  # manual only
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    rng = np.random.default_rng(3)
+    for _ in range(2500):
+        k = int(rng.integers(0, KEYSPACE))
+        assert db.put(k, 120) == oracle.put(k, 120)
+
+    def check_all():
+        assert_map_consistent(db)
+        for k in range(0, KEYSPACE, 7):
+            assert db.get(k) == oracle.get(k), k
+        for lo in range(0, KEYSPACE, 97):
+            assert db.scan(lo, 25) == oracle.scan(lo, 25), lo
+        assert db.scan_range(0, KEYSPACE) == oracle.scan_range(0, KEYSPACE)
+
+    rep = db.repartitioner
+    assert rep.force_split(0, split_key=90)
+    rep.drain()
+    assert 90 in db._bounds_list and len(db.shards) == 5
+    check_all()
+    i = db._bounds_list.index(90)
+    assert rep.force_merge(i)
+    rep.drain()
+    assert 90 not in db._bounds_list and len(db.shards) == 4
+    check_all()
+
+
+@pytest.mark.parametrize("system", ["rocksdb_tiered", "prismdb"])
+def test_repartition_baselines_match_their_oracle(system):
+    """Non-HotRAP engines repartition too (fd-used demand signal) and
+    keep their own oracle equivalence."""
+    cfg = cluster_cfg(hotrap=False)
+    db = make_sharded_system(system, cfg, shard_cfg=repart_scfg(), seed=0)
+    oracle = make_system(system, cfg, seed=0)
+    skewed_trace(db, oracle, n_ops=3000, seed=11)
+    assert_map_consistent(db)
+
+
+# ----------------------------------------------------------------------
+# live migration: atomicity against interleaved batched reads
+# ----------------------------------------------------------------------
+def test_map_atomicity_under_interleaved_multi_get_and_scan():
+    """With a migration in flight (pre-copy streaming between ops),
+    every multi_get/scan must see a consistent map and exact results;
+    the cutover lands atomically between ops."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9,
+                       migration_records_per_op=8)   # slow stream
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    rng = np.random.default_rng(13)
+    for _ in range(3000):
+        k = int(rng.integers(0, KEYSPACE))
+        assert db.put(k, 120) == oracle.put(k, 120)
+    rep = db.repartitioner
+    assert rep.force_split(1)
+    assert rep._job is not None
+    saw_active = False
+    while True:
+        active = rep._job is not None
+        saw_active |= active
+        assert_map_consistent(db)
+        keys = rng.integers(0, KEYSPACE, size=32).astype(np.uint64)
+        assert db.multi_get(keys) == [oracle.get(int(k)) for k in keys]
+        lo = int(rng.integers(0, KEYSPACE))
+        assert db.scan(lo, 20) == oracle.scan(lo, 20)
+        # writes during the migration must land in the post-cutover map
+        k = int(rng.integers(0, KEYSPACE))
+        assert db.put(k, 120) == oracle.put(k, 120)
+        if not active:
+            break
+    assert saw_active
+    assert rep.n_splits == 1
+    for k in range(0, KEYSPACE, 17):
+        assert db.get(k) == oracle.get(k)
+
+
+def test_migration_pins_source_version_until_cutover():
+    """The pre-copy pins the source's Version (refcount) and releases
+    it at cutover; retired sources drop their engine pin too."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9,
+                       migration_records_per_op=4)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 150)
+    db.flush_all()
+    src = db.shards[2]
+    v = src.version
+    refs_before = v.refs
+    rep = db.repartitioner
+    assert rep.force_split(2)
+    assert v.refs == refs_before + 1       # migration pin
+    assert any(p is v for p in rep._job.pins)
+    rep.drain()
+    assert v.refs == refs_before - 1       # pin + engine ref both gone
+
+
+# ----------------------------------------------------------------------
+# migration-cost accounting
+# ----------------------------------------------------------------------
+def test_migration_cost_accounted_in_runresult():
+    """RunResult must surface repartition events and migration bytes,
+    and the storage snapshot must carry a 'migration' component."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=250,
+                       repartition_cooldown_ops=150)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 200)
+    db.flush_all()
+    db.reset_storage()
+    dist = KeyDist("hotspot", KEYSPACE, hot_frac=0.10, scramble=False)
+    wl = ycsb("RW", dist, 6000, 200, seed=7)
+    res = run_workload(db, wl, name="hotrap-repart")
+    assert res.n_repartitions >= 1
+    assert res.migration_bytes > 0
+    snap = res.repartition
+    assert snap is not None
+    assert snap["n_splits"] + snap["n_merges"] == res.n_repartitions
+    assert snap["migrated_records"] > 0
+    assert snap["migrated_read_bytes"] > 0
+    assert snap["migrated_write_bytes"] > 0
+    assert snap["events"], snap
+    assert res.n_shards == len(db.shards)
+    comp = res.storage["components"]
+    assert "migration" in comp and comp["migration"]["read_bytes"] > 0
+    # retired slices stay in the merged snapshot: at least one slice
+    # per shard ever alive
+    assert len(res.storage["shards"]) >= len(db.shards)
+
+
+def test_retired_shard_stats_fold_into_aggregate():
+    """Retiring a shard must not drop its op counters from the cluster
+    aggregate (gets/puts monotone across a cutover)."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 150)
+    for k in range(0, KEYSPACE, 3):
+        db.get(k)
+    before = db.stats
+    rep = db.repartitioner
+    assert rep.force_split(0)
+    rep.drain()
+    after = db.stats
+    assert after.puts == before.puts == KEYSPACE
+    assert after.gets == before.gets
+
+
+# ----------------------------------------------------------------------
+# HotBudget retopology + bounds + hotness handoff
+# ----------------------------------------------------------------------
+def test_hot_budget_retopology_after_split_and_merge():
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    rng = np.random.default_rng(2)
+    for _ in range(4000):
+        db.put(int(rng.integers(0, KEYSPACE)), 150)
+    for _ in range(3000):                  # heat shard 0
+        db.get(int(rng.integers(0, KEYSPACE // 4)))
+    db.hot_budget.rebalance()
+    rep = db.repartitioner
+    assert rep.force_split(0)
+    rep.drain()
+    hb = db.hot_budget
+    assert len(hb.shares) == len(db.shards) == 5
+    assert len(hb._scale) == 5
+    assert abs(float(hb.shares.sum()) - 1.0) < 1e-9
+    assert rep.force_merge(3)
+    rep.drain()
+    assert len(db.hot_budget.shares) == len(db.shards) == 4
+    assert abs(float(db.hot_budget.shares.sum()) - 1.0) < 1e-9
+    # a later rebalance keeps working on the new topology
+    shares = db.hot_budget.rebalance()
+    assert len(shares) == 4
+
+
+def test_shard_count_stays_within_bounds():
+    """Aggressive triggers must never leave [min_shards, max_shards]."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=150,
+                       repartition_cooldown_ops=0,
+                       split_factor=1.05, merge_factor=0.9,
+                       min_shards=3, max_shards=5)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    skewed_trace(db, oracle, n_ops=4000, seed=17)
+    assert 3 <= len(db.shards) <= 5
+    assert_map_consistent(db)
+
+
+def test_split_hands_hotness_to_children():
+    """Post-split children must inherit the source's RALT hot set (the
+    demand signal) instead of starting stone cold."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    rng = np.random.default_rng(4)
+    for _ in range(4000):
+        db.put(int(rng.integers(0, KEYSPACE)), 150)
+    db.flush_all()
+    for _ in range(4000):                  # heat the whole of shard 0
+        db.get(int(rng.integers(0, KEYSPACE // 4)))
+    assert db.shards[0].ralt.hot_set_bytes > 0
+    rep = db.repartitioner
+    assert rep.force_split(0)
+    rep.drain()
+    child_hot = [db.shards[i].ralt.hot_set_bytes for i in (0, 1)]
+    assert child_hot[0] > 0 and child_hot[1] > 0, child_hot
+
+
+def test_split_point_prefers_hot_median():
+    """A hotspot confined to a sub-range must be *divided* by the split
+    (boundary strictly inside the hot range), not left on one child."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 150)
+    db.flush_all()
+    rng = np.random.default_rng(6)
+    hot_lo, hot_hi = 40, 120               # hot range inside shard 0
+    for _ in range(6000):
+        db.get(int(rng.integers(hot_lo, hot_hi)))
+    rep = db.repartitioner
+    key = rep._choose_split_key(0)
+    assert hot_lo < key < hot_hi, key
+
+
+def test_repartitioned_cluster_survives_pickle():
+    """DB_CACHE-style round-trip after a repartition: the clone serves
+    identically and can keep repartitioning (system-name factory)."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, 150)
+    rep = db.repartitioner
+    assert rep.force_split(1)
+    rep.drain()
+    buf = io.BytesIO()
+    pickle.dump(db, buf, protocol=pickle.HIGHEST_PROTOCOL)
+    clone = pickle.loads(buf.getvalue())
+    clone.reset_storage()
+    assert clone.get(10) == db.get(10)
+    assert clone.scan(0, 15) == db.scan(0, 15)
+    assert clone._bounds_list == db._bounds_list
+    assert clone.repartitioner.force_merge(0)
+    clone.repartitioner.drain()
+    assert len(clone.shards) == len(db.shards) - 1
+
+
+def test_single_shard_cluster_grows_under_load():
+    """n=1 must not be a trigger dead zone: demand == fair by
+    definition, so any loaded single shard splits (up to max_shards)."""
+    cfg = cluster_cfg()
+    scfg = repart_scfg(n_shards=1, repartition_interval_ops=300,
+                       min_shards=1, max_shards=4)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    skewed_trace(db, oracle, n_ops=3000, seed=19)
+    assert db.repartitioner.n_splits >= 1
+    assert 1 < len(db.shards) <= 4
+    assert_map_consistent(db)
+    # the configured arbiter comes online once the cluster is multi-shard
+    assert db.hot_budget is not None
+    assert len(db.hot_budget.shares) == len(db.shards)
+
+
+def test_factory_cluster_refuses_shard_builds_after_pickle():
+    """A factory-constructed cluster (no system name) must fail loudly
+    — not silently build wrong-engine shards — if asked to repartition
+    after a pickle round-trip dropped the factory."""
+    from repro.core import ShardedTieredLSM, TieredLSM
+    cfg = cluster_cfg()
+    scfg = repart_scfg(repartition_interval_ops=10 ** 9)
+    db = ShardedTieredLSM(
+        scfg, cfg, factory=lambda sub, s: TieredLSM(sub, seed=s))
+    for k in range(KEYSPACE):
+        db.put(k, 150)
+    clone = pickle.loads(pickle.dumps(db, protocol=pickle.HIGHEST_PROTOCOL))
+    assert clone.get(10) == db.get(10)     # serving still works
+    with pytest.raises(RuntimeError, match="factory"):
+        clone.repartitioner.force_split(0)
+        clone.repartitioner.drain()
+
+
+def test_config_knobs_flow_through_shard_config():
+    from repro.configs.hotrap_kv import CONFIG, shard_config
+    c = dataclasses.replace(CONFIG, partitioning="range", repartition=True,
+                            min_shards=3, max_shards=6, split_factor=1.5)
+    scfg = shard_config(c)
+    assert scfg.repartition and scfg.min_shards == 3
+    assert scfg.max_shards == 6 and scfg.split_factor == 1.5
+    with pytest.raises(ValueError):
+        ShardConfig(min_shards=4, max_shards=2)
+    with pytest.raises(ValueError):
+        ShardConfig(demand_signal="nope")
