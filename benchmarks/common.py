@@ -35,6 +35,14 @@ def profile_name() -> str:
     return os.environ.get("REPRO_BENCH_PROFILE", "default")
 
 
+def sanitize_enabled() -> bool:
+    """`--sanitize` (or REPRO_SANITIZE=1) runs every engine these
+    benchmarks build under the runtime sanitizer (core/sanitize.py):
+    op-by-op invariant checks, and a `close()` sweep at teardown that
+    raises on any Version-ref leak or stats-conservation break."""
+    return "--sanitize" in sys.argv or os.environ.get("REPRO_SANITIZE") == "1"
+
+
 def make_cfg(profile: str | None = None, **kw) -> LSMConfig:
     p = PROFILES[profile or profile_name()]
     cfg = LSMConfig(fd_size=p["fd"], sd_size=p["sd"],
@@ -88,6 +96,15 @@ class LoadedDBCache:
         self._blobs: dict[tuple, bytes] = {}
 
     def get(self, system: str, cfg: LSMConfig, value_len: int, seed: int = 0):
+        if sanitize_enabled():
+            # the sanitizer wrapper holds live engine hooks and is not
+            # picklable: load fresh (slower, but every op is checked —
+            # including the load phase)
+            db = make_system(system, cfg, seed=seed, sanitize=True)
+            nk = db_key_count(cfg, value_len)
+            load_db(db, nk, value_len, seed)
+            db.reset_storage()
+            return db, nk
         key = (system, cfg.fd_size, cfg.sd_size, value_len, seed)
         if key not in self._blobs:
             db = make_system(system, cfg, seed=seed)

@@ -1,11 +1,14 @@
 """Benchmark harness entry point.  One section per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick|--full] [names...]
+    PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--sanitize] \
+        [names...]
 
 Prints `name,us_per_call,derived` CSV lines.  `--quick` shrinks the
 simulated DB and op counts; default profile matches the paper's ratios
-at laptop scale.  Optional positional names select a subset, e.g.
-`python -m benchmarks.run ycsb ablations`.
+at laptop scale.  `--sanitize` wraps every engine in the runtime
+sanitizer (core/sanitize.py) — much slower, but every op is checked
+against the invariant suite.  Optional positional names select a
+subset, e.g. `python -m benchmarks.run ycsb ablations`.
 """
 from __future__ import annotations
 

@@ -24,6 +24,11 @@ stage, aggregated over stages as window-ops / total-window-time.
 (b) at least one split AND one merge actually happened, and
 (c) a mid-workload split + merge stays byte-identical to the unsharded
     oracle (a compact interleaved get/scan trace).
+
+``--sanitize`` (CI check job) runs every cluster under the runtime
+sanitizer (core/sanitize.py): op-by-op invariant checks plus a
+``close()`` sweep per policy that raises on any Version-ref leak or
+stats-conservation break across the live splits and merges.
 """
 from __future__ import annotations
 
@@ -35,7 +40,8 @@ from repro.core import LSMConfig, ShardConfig, make_sharded_system, make_system
 from repro.core.runner import db_key_count, load_db, run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import SHARD_POLICIES, emit, make_cfg, n_ops, skew_shard_config
+from .common import (SHARD_POLICIES, emit, make_cfg, n_ops,
+                     sanitize_enabled, skew_shard_config)
 
 N_SHARDS = 4
 HOT_FRAC = 0.05
@@ -43,7 +49,8 @@ STAGES = 5                      # hotspot offsets walk 0 -> 0.75
 
 
 def _loaded(cfg, scfg, value_len: int, seed: int = 0):
-    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=seed)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=seed,
+                             sanitize=sanitize_enabled())
     nk = db_key_count(cfg, value_len)
     load_db(db, nk, value_len, seed)
     db.reset_storage()
@@ -85,6 +92,14 @@ def run_walk(value_len: int = 1000, tag: str = "shifting_hotspot",
              f"thr={overall:.0f}ops/s;"
              f"stage_thr={'/'.join(f'{t:.0f}' for t in stage_thr)}"
              + extra)
+        if sanitize_enabled():
+            # raises SanitizeError on any ref leak / conservation break
+            report = db.close()
+            print(f"# sanitize {name}: {report['checks_refs']} refs checks, "
+                  f"{report['checks_migration']} migration checks, "
+                  f"{report['checks_cutovers_checked']} cutovers, "
+                  f"{report['checks_oracle']} oracle samples — clean",
+                  flush=True)
         results[name] = (overall, snap)
     return results
 
@@ -103,7 +118,8 @@ def equivalence_check() -> None:
                        repartition_interval_ops=10 ** 9,
                        migration_records_per_op=32,
                        memtable_floor=8 * KIB, block_cache_floor=8 * KIB)
-    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0,
+                             sanitize=sanitize_enabled())
     oracle = make_system("hotrap", cfg, seed=0)
     rng = np.random.default_rng(23)
     rep = db.repartitioner
@@ -130,6 +146,8 @@ def equivalence_check() -> None:
     rep.drain()
     trade(1000)
     assert rep.n_splits >= 1 and rep.n_merges >= 1
+    if sanitize_enabled():
+        db.close()
 
 
 def smoke() -> None:
@@ -155,6 +173,11 @@ def smoke() -> None:
           f"({thr_rep / max(thr_arb, 1e-9):.2f}x), "
           f"splits={snap['n_splits']}, merges={snap['n_merges']}",
           flush=True)
+    if sanitize_enabled():
+        # every policy's close() above would have raised otherwise
+        print(f"SANITIZE OK: zero refcount leaks, exact stats conservation "
+              f"across {snap['n_splits']} splits and {snap['n_merges']} "
+              f"merges", flush=True)
 
 
 def main(quick: bool = False):

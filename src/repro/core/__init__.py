@@ -14,6 +14,11 @@ Public API:
                                 dynamic split/merge repartitioning
                                 (core/shards.py)
     StorageSim                — simulated tiered devices (core/storage.py)
+    sanitize_db, Sanitizer    — runtime invariant sanitizer; wrap any
+                                engine to validate seq monotonicity,
+                                Version refcounts, stats conservation,
+                                and sampled oracle equality op by op
+                                (core/sanitize.py)
 """
 from .lsm import LSMConfig, TieredLSM          # noqa: F401
 from .version import GroupView, Superversion, Version  # noqa: F401
@@ -23,3 +28,5 @@ from .baselines import (SYSTEMS, make_sharded_system,  # noqa: F401
 from .shards import (HotBudget, Repartitioner, ShardConfig,  # noqa: F401
                      ShardedTieredLSM)
 from .storage import StorageSim                # noqa: F401
+from .sanitize import (SanitizeError, SanitizedDB,  # noqa: F401
+                       Sanitizer, sanitize_db)

@@ -120,7 +120,7 @@ class Mutant(TieredLSM):
                                       component="migration")
                 self.storage.seq_write(tgt, s.size_bytes, fg=False,
                                        component="migration")
-                s.tier = tgt
+                s.retarget(tier=tgt)
 
     def _install_edits(self, edits):
         super()._install_edits(edits)
@@ -287,7 +287,10 @@ class PrismDB(TieredLSM):
         self.stats.compaction_bytes += fd_bytes + sd_bytes
         self._install_edits([(li, inputs, new_fd), (lj, nexts, new_sd)])
         for s in all_inputs:
-            s.compacted = True
+            # no mark_compacting() cycle: PrismDB has no promotion cache,
+            # so the §3.3 in-flight abort window does not apply — only the
+            # terminal compacted flag matters (for _sid_compacted parity)
+            s.finish_compaction()
             self._sid_compacted[s.sid] = True
 
 
@@ -298,7 +301,10 @@ SYSTEMS = ["hotrap", "rocksdb_fd", "rocksdb_tiered", "mutant", "sas_cache",
 
 def make_system(name: str, cfg: LSMConfig | None = None,
                 storage: StorageSim | None = None, seed: int = 0,
-                **overrides) -> TieredLSM:
+                sanitize: bool = False, **overrides) -> TieredLSM:
+    if sanitize:
+        from .sanitize import sanitize_db
+        return sanitize_db(make_system(name, cfg, storage, seed, **overrides))
     cfg = cfg or LSMConfig()
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
@@ -325,14 +331,21 @@ def make_system(name: str, cfg: LSMConfig | None = None,
 
 
 def make_sharded_system(name: str, cfg: LSMConfig | None = None,
-                        shard_cfg=None, seed: int = 0, **overrides):
+                        shard_cfg=None, seed: int = 0,
+                        sanitize: bool = False, **overrides):
     """Sharded construction for every compared system: N shared-nothing
     shards of `name`'s engine behind the core/shards.py router.  `cfg`
     is the *cluster-total* resource budget; each shard gets a 1/N slice
     (see shards.shard_lsm_config).  `shard_cfg` is a ShardConfig
     (defaults: 4 hash-partitioned shards with the HotBudget arbiter on).
+    `sanitize=True` wraps the cluster in the runtime sanitizer
+    (core/sanitize.py); the wrapper is not picklable — skip DB_CACHE.
     """
     from .shards import ShardConfig, ShardedTieredLSM
+    if sanitize:
+        from .sanitize import sanitize_db
+        return sanitize_db(make_sharded_system(name, cfg, shard_cfg, seed,
+                                               **overrides))
     cfg = cfg or LSMConfig()
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)

@@ -648,19 +648,25 @@ class TieredLSM:
             immpc.sv.release()              # no-op if already released
             return
         hot: list[tuple[int, int, int]] = []
-        for key, seq, vlen in immpc.records:
-            if self.cfg.hotness_check and self.ralt is not None:
-                if not self.ralt.is_hot(key):
+        try:
+            for key, seq, vlen in immpc.records:
+                if self.cfg.hotness_check and self.ralt is not None:
+                    if not self.ralt.is_hot(key):
+                        continue
+                if key in immpc.updated:        # Fig. 5 (a)-(c) protocol
+                    self.stats.checker_excluded_updated += 1
                     continue
-            if key in immpc.updated:            # Fig. 5 (a)-(c) protocol
-                self.stats.checker_excluded_updated += 1
-                continue
-            if self._newer_in_snapshot(key, seq, immpc):
-                self.stats.checker_excluded_newer += 1
-                continue
-            hot.append((key, seq, vlen))
-        self.immpcs.remove(immpc)
-        immpc.sv.release()                      # unpin the frozen Version
+                if self._newer_in_snapshot(key, seq, immpc):
+                    self.stats.checker_excluded_newer += 1
+                    continue
+                hot.append((key, seq, vlen))
+        finally:
+            # unpin the frozen Version on *every* exit: a hotness probe
+            # or snapshot search raising mid-scan abandons the promotion
+            # (placement only, never visibility) but must not leak the
+            # ref and pin the old topology forever
+            self.immpcs.remove(immpc)
+            immpc.sv.release()
         if not hot:
             return
         hot_bytes = sum(KEY_BYTES + v for _, _, v in hot)
@@ -807,7 +813,7 @@ class TieredLSM:
         nexts = [t for t in self.levels[lj] if t.overlaps(lo, hi)]
         all_inputs = inputs + nexts
         for s in all_inputs:
-            s.being_compacted = True
+            s.mark_compacting()
         in_bytes = sum(s.size_bytes for s in all_inputs)
         for s in all_inputs:
             self.storage.seq_read(s.tier, s.size_bytes, fg=False,
@@ -849,8 +855,7 @@ class TieredLSM:
             self._install_edits([(li, inputs, []),
                                  (lj, nexts, new)])
         for s in all_inputs:
-            s.being_compacted = False
-            s.compacted = True
+            s.finish_compaction()
             self._sid_compacted[s.sid] = True
             self.block_cache.invalidate_sstable(s.sid)
 
@@ -953,8 +958,8 @@ class TieredLSM:
             rm = set(s.sid for s in removed)
             kept = [s for s in levels[li] if s.sid not in rm]
             for s in added:
-                s.level = li
-                s.tier = "FD" if li < self.cfg.n_fd_levels else "SD"
+                s.retarget(tier="FD" if li < self.cfg.n_fd_levels else "SD",
+                           level=li)
             kept.extend(added)
             if li == 0:
                 kept.sort(key=lambda s: -s.created_at)

@@ -172,6 +172,8 @@ def _view_source(view: GroupView, lo: int, hi: int, charge_block):
         return
     seen: set[int] = set()
     ssts = view.ssts
+    # lint: allow-loop (chunked cursor: limit-bounded scans must not
+    # materialise the whole view tail)
     for start in range(a, b, _VIEW_CHUNK):
         end = min(start + _VIEW_CHUNK, b)
         rows = zip(view.keys[start:end].tolist(),
@@ -179,6 +181,8 @@ def _view_source(view: GroupView, lo: int, hi: int, charge_block):
                    view.vlens[start:end].tolist(),
                    view.src[start:end].tolist(),
                    view.blks[start:end].tolist())
+        # lint: allow-loop (per-record yield — the merge consumes
+        # cursors record-at-a-time; REMIX reduces how many are pulled)
         for key, seq, vlen, si, blk in rows:
             code = (si << 32) | blk
             if code not in seen:
@@ -222,6 +226,7 @@ def build_sources(db, version: Version, lo: int, hi: int,
     single chained cursors.
     """
     sources: list = []
+    # lint: allow-loop (per-source assembly, bounded by memtable count)
     for table in [db.memtable, *db.imm_memtables]:
         src = _mem_source(table, lo, hi)
         if src is not None:
@@ -234,9 +239,12 @@ def build_sources(db, version: Version, lo: int, hi: int,
         if view is not None and view.n:
             sources.append(_view_source(view, lo, hi, charge_block))
     else:
+        # lint: allow-loop (per-table/per-level source assembly — the
+        # non-remix ablation path)
         for sst in version.levels[0]:  # L0 overlaps: one source each
             if sst.overlaps(lo, hi):
                 sources.append(_sstable_source(sst, lo, hi, charge_block))
+        # lint: allow-loop (per-level, bounded by level count)
         for li in range(1, n_fd):
             if version.levels[li]:
                 sources.append(_level_source(version.levels[li], lo, hi,
@@ -253,6 +261,7 @@ def build_sources(db, version: Version, lo: int, hi: int,
         if view is not None and view.n:
             sources.append(_view_source(view, lo, hi, charge_block))
     else:
+        # lint: allow-loop (per-level, bounded by level count)
         for li in range(n_fd, len(version.levels)):
             if version.levels[li]:
                 sources.append(_level_source(version.levels[li], lo, hi,
@@ -277,6 +286,7 @@ def merge_scan(sources: list, counters: MergeCounters | None = None):
     """
     c = counters if counters is not None else MergeCounters()
     cursors = []
+    # lint: allow-loop (per-source priming, bounded by source count)
     for pri, src in enumerate(sources):
         it = iter(src)
         first = next(it, None)
@@ -331,6 +341,7 @@ def _merge_two(cursors, c: MergeCounters):
 def _merge_heap(cursors, c: MergeCounters):
     """k-way min-heap merge (the PR-2 path; >2 active sources)."""
     heap = []
+    # lint: allow-loop (per-source heap seeding, bounded by source count)
     for (key, seq, vlen, sid), pri, it in cursors:
         # (key, pri) is unique across the heap -> later fields never
         # participate in comparisons.

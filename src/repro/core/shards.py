@@ -86,8 +86,12 @@ as sequential writes on the destination devices, the source RALT's hot
 set is transplanted (``RALT.seed_records``) so the children do not look
 stone cold to the next trigger check, the new boundary list replaces
 the old in one splice, and ``HotBudget`` shares are re-mapped onto the
-new topology (split shares divide between the children by record
-count, merged shares sum).  Retired source shards stay visible to the
+new topology (a split share divides between the children by their
+*measured heat* — transplanted RALT hot bytes via ``shard_demand``,
+record count only as the no-signal fallback — and merged shares sum).
+Bytes that landed on a source after its snapshot was pinned are charged
+at cutover as sequential migration reads (the pre-copy stream covered
+only the pinned snapshot).  Retired source shards stay visible to the
 time accounting — their ``StorageSim`` slices and op ``Stats`` are
 folded into the router's aggregate — so migration cost is never
 dropped on the floor.
@@ -602,6 +606,31 @@ class Repartitioner:
             self._cutover()
 
     # -- cutover -------------------------------------------------------
+    def _charge_migration_delta(self, job: _MigrationJob) -> None:
+        """Charge source bytes that landed *after* the snapshot pin.
+
+        The pre-copy stream charged only the pinned Version's group
+        bytes, but ``_extract`` reads the sources' *current* group
+        views — so without this, writes absorbed mid-migration would
+        travel to the destinations for free.  The positive growth of
+        each (source, tier) group over what the stream already charged
+        is read here sequentially under component="migration".  A
+        compaction can shrink a group or move bytes across tiers
+        between pin and cutover; negative deltas are clamped to zero
+        (re-charging rewritten bytes would double-count work the
+        compaction already paid for)."""
+        streamed: dict[tuple[int, str], int] = {}
+        for seg in job.segments:
+            streamed[(id(seg["storage"]), seg["tier"])] = seg["charged"]
+        for sh in self._sources(job.ops):
+            for group in ("FD", "SD"):
+                _, cur = sh.version.group_stats(group, sh.cfg.n_fd_levels)
+                delta = cur - streamed.get((id(sh.storage), group), 0)
+                if delta > 0:
+                    sh.storage.seq_read(group, delta, fg=False,
+                                        component="migration")
+                    self.migrated_read_bytes += delta
+
     @staticmethod
     def _extract(shard: TieredLSM):
         """A shard's full visible state as sequential streams: the FD
@@ -722,6 +751,22 @@ class Repartitioner:
         job = self._job
         self._job = None
         r = self.router
+        try:
+            self._charge_migration_delta(job)
+            self._cutover_surgery(job, r)
+        finally:
+            # released on *every* exit path: an exception mid-surgery
+            # must not leak the sources' Version refcounts (the runtime
+            # sanitizer and tests/test_version.py exception-injection
+            # tests hold this to zero)
+            for v in job.pins:
+                v.unref()
+        self._probe_state = _prune_probe_state(self._probe_state, r.shards)
+        self._cooldown = self.scfg.repartition_cooldown_ops
+        self._ops_since_check = 0
+
+    def _cutover_surgery(self, job: _MigrationJob,
+                         r: "ShardedTieredLSM") -> None:
         shares = scales = None
         if r.hot_budget is not None:
             shares = [float(s) for s in r.hot_budget.shares]
@@ -746,8 +791,18 @@ class Repartitioner:
                 if shares is not None:
                     s = shares.pop(idx)
                     scales.pop(idx)
-                    tot = max(n_a + n_b, 1)
-                    shares[idx:idx] = [s * n_a / tot, s * n_b / tot]
+                    # demand-weighted inheritance: the transplanted RALT
+                    # heat (shard_demand hot bytes) decides how the
+                    # parent's FD share divides, so the child that took
+                    # the hot set takes the budget; record counts only
+                    # when neither child reports heat (no RALT, or a
+                    # stone-cold split)
+                    w_a = shard_demand(sh_a, "hot_bytes", {})
+                    w_b = shard_demand(sh_b, "hot_bytes", {})
+                    if w_a + w_b <= 0.0:
+                        w_a, w_b = float(n_a), float(n_b)
+                    tot = max(w_a + w_b, 1.0)
+                    shares[idx:idx] = [s * w_a / tot, s * w_b / tot]
                     scales[idx:idx] = [1.0, 1.0]
                 self.n_splits += 1
                 detail.append({"kind": "split", "at": idx, "key": int(p),
@@ -774,8 +829,6 @@ class Repartitioner:
                 detail.append({"kind": "merge", "at": idx,
                                "records": n_c})
         r._bounds = np.array(r._bounds_list, dtype=np.uint64)
-        for v in job.pins:
-            v.unref()
         if r.hot_budget is not None:
             r.hot_budget.retopology(np.array(shares), np.array(scales))
         elif r.scfg.hot_budget and len(r.shards) > 1:
@@ -783,9 +836,6 @@ class Repartitioner:
             # create at __init__; growing past one shard brings the
             # configured arbitration online (fair initial shares)
             r.hot_budget = HotBudget(r.scfg, r.shards)
-        self._probe_state = _prune_probe_state(self._probe_state, r.shards)
-        self._cooldown = self.scfg.repartition_cooldown_ops
-        self._ops_since_check = 0
         self.events.append({
             "ops": detail, "at_op": self.total_ops,
             "n_shards": len(r.shards),
@@ -985,8 +1035,10 @@ class ShardedTieredLSM:
             return []
         sids = self._shard_ids(ks)
         out: list = [None] * len(ks)
-        for si in np.unique(sids):
+        for si in np.unique(sids):  # lint: allow-loop (per-shard drain)
             shard = self.shards[int(si)]
+            # lint: allow-loop (per-key drain — removing it needs the
+            # ROADMAP's vectorized-batch TieredLSM get)
             for j in np.flatnonzero(sids == si):
                 out[int(j)] = shard.get(int(ks[j]))
         self._account_ops(len(ks))
@@ -1004,6 +1056,7 @@ class ShardedTieredLSM:
         the merge discarded leave the served-record tallies."""
         corr = self._corrections
         corr.scans -= n_shard_scans - 1
+        # lint: allow-loop (discarded-overfetch tail; usually empty)
         for _, _, _, tier in dropped:
             corr.scanned_records -= 1
             field = self._TIER_FIELD[tier]
@@ -1019,6 +1072,7 @@ class ShardedTieredLSM:
             # (each is asked for exactly the remainder — no overfetch)
             out: list[tuple[int, int, int]] = []
             calls = 0
+            # lint: allow-loop (per-shard fan-out, bounded by n_shards)
             for si in range(self.shard_of(lo), len(self.shards)):
                 out.extend(self.shards[si].scan(lo, n - len(out)))
                 calls += 1
@@ -1042,6 +1096,7 @@ class ShardedTieredLSM:
         if self.scfg.partitioning == "range":
             out: list[tuple[int, int, int]] = []
             lo_si, hi_si = self.shard_of(lo), self.shard_of(hi)
+            # lint: allow-loop (per-shard fan-out, bounded by n_shards)
             for si in range(lo_si, hi_si + 1):
                 out.extend(self.shards[si].scan_range(lo, hi))
             self._fold_fanout(hi_si - lo_si + 1, ())

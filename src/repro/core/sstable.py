@@ -121,6 +121,32 @@ class SSTable:
     def overlaps(self, lo: int, hi: int) -> bool:
         return not (self.max_key < lo or self.min_key > hi)
 
+    # -- sanctioned mutation ------------------------------------------
+    # `tier`/`level`/`being_compacted`/`compacted` are *placement and
+    # lifecycle bookkeeping*, not data: the record arrays, fences and
+    # bloom stay frozen for the SSTable's whole life.  All writes to
+    # them go through the three methods below so the immutability lint
+    # (tools/check) can flag any other attribute store on an SSTable.
+
+    def retarget(self, tier: str | None = None,
+                 level: int | None = None) -> None:
+        """Re-place the table (compaction install, Mutant migration)."""
+        if tier is not None:
+            self.tier = tier
+        if level is not None:
+            self.level = level
+
+    def mark_compacting(self) -> None:
+        """Flag the table as a live compaction input (§3.3: promotions
+        into a table being compacted must abort at install)."""
+        self.being_compacted = True
+
+    def finish_compaction(self) -> None:
+        """The table's records have been rewritten elsewhere; it is no
+        longer a valid promotion target."""
+        self.being_compacted = False
+        self.compacted = True
+
     def find(self, key: int) -> tuple[int, int, int] | None:
         """Returns (seq, vlen, block_idx) or None. No I/O charged here."""
         i = int(np.searchsorted(self.keys, np.uint64(key)))

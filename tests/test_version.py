@@ -266,3 +266,128 @@ def test_view_path_charges_scan_io(system):
     db.scan_range(0, 1500)
     r1 = sum(db.storage.dev[t].read_bytes for t in ("FD", "SD"))
     assert r1 > r0
+
+
+# ----------------------------------------------------------------------
+# exception injection: no Version ref may leak when an op dies mid-flight
+# (PR 6 — the runtime counterpart of the tools/check `pins` lint pass)
+# ----------------------------------------------------------------------
+def _loaded_hotrap(n=3000):
+    """hotrap engine with data pushed to SD and the checker parked, so
+    get/scan exercise real device charges."""
+    db = make_system("hotrap", tiny_cfg(checker_delay_ops=10_000))
+    rng = np.random.default_rng(0)
+    keys = np.arange(n)
+    rng.shuffle(keys)
+    for k in keys:
+        db.put(int(k), 300)
+    db.flush_all()
+    return db
+
+
+def _pin_picture(db):
+    """(engine refs, [sv refs]) — everything that should survive an
+    aborted operation unchanged."""
+    return (db.version.refs,
+            [immpc.sv.version.refs for immpc in db.immpcs])
+
+
+class _Boom(RuntimeError):
+    pass
+
+
+def _raise_io(*a, **kw):
+    raise _Boom("injected device failure")
+
+
+def test_get_exception_mid_probe_leaks_no_pin():
+    db = _loaded_hotrap()
+    assert db.get(7) is not None              # warm path sanity
+    before = _pin_picture(db)
+    db.storage.rand_read = _raise_io
+    with pytest.raises(_Boom):
+        for k in range(3000):                 # first uncached SD probe dies
+            db.get(k)
+    del db.storage.rand_read                  # restore the class method
+    assert _pin_picture(db) == before, "get() leaked a Version pin"
+    assert db.get(7) is not None              # engine survives the abort
+
+
+def test_scan_exception_mid_merge_leaks_no_pin():
+    db = _loaded_hotrap()
+    assert db.scan(0, 10)
+    before = _pin_picture(db)
+    db.storage.rand_read = _raise_io
+    db.storage.seq_read = _raise_io
+    with pytest.raises(_Boom):
+        db.scan_range(0, 2500)
+    del db.storage.rand_read
+    del db.storage.seq_read
+    assert _pin_picture(db) == before, "scan leaked a Version pin"
+    assert db.scan(0, 10)
+
+
+def test_checker_exception_releases_superversion():
+    """A hotness probe dying mid-checker must still release the frozen
+    Superversion pin (the try/finally in _run_checker): the promotion is
+    abandoned, the old Version must not stay pinned forever."""
+    db = _loaded_hotrap()
+    for k in range(3000):                     # stage SD hits into the mPC
+        db.get(k)
+        if len(db.mpc) > 10:
+            break
+    db._freeze_mpc()
+    immpc = db.immpcs[-1]
+    frozen = immpc.sv.version
+    assert frozen.refs >= 1
+    db.ralt.is_hot = _raise_io
+    with pytest.raises(_Boom):
+        db._run_checker(immpc)
+    del db.ralt.is_hot
+    assert immpc.sv._released, "aborted checker kept the superversion pin"
+    assert immpc not in db.immpcs
+    assert frozen.refs == (1 if frozen is db.version else 0)
+
+
+def test_cutover_exception_releases_migration_pins(monkeypatch):
+    """A split/merge cutover dying mid-surgery (destination SSTable build
+    fails) must unref every source-shard pin the migration took — the
+    try/finally in Repartitioner._cutover."""
+    from repro.core import ShardConfig, make_sharded_system
+    from repro.core import shards as shards_mod
+
+    cfg = tiny_cfg()
+    keyspace = 800
+    scfg = ShardConfig(n_shards=4, partitioning="range", key_space=keyspace,
+                       repartition=True, repartition_interval_ops=300,
+                       repartition_cooldown_ops=200,
+                       migration_records_per_op=8,
+                       rebalance_interval_ops=250,
+                       memtable_floor=8 * KIB, block_cache_floor=8 * KIB)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    rep = db.repartitioner
+    rng = np.random.default_rng(7)
+    q = keyspace // 4
+    for i in range(60_000):                   # skew until a job starts
+        k = (int(rng.integers(0, q)) if rng.random() < 0.7
+             else int(rng.integers(0, keyspace)))
+        if rng.random() < 0.7:
+            db.put(k, 100)
+        else:
+            db.get(k)
+        if rep._job is not None:
+            break
+    assert rep._job is not None, "no migration started under skew"
+    pins = list(rep._job.pins)
+    assert pins and all(v.refs >= 2 for v in pins)
+    before = [v.refs for v in pins]
+    monkeypatch.setattr(shards_mod, "split_into_sstables", _raise_io)
+    with pytest.raises(_Boom):
+        rep.drain()                           # cutover fires mid-drain
+    assert rep._job is None
+    # Every migration pin must be gone: refs drop by the pin (-1), and by
+    # one more for any source the partial surgery already retired (the
+    # engine ref goes with _retire).  What may NOT happen is a version
+    # still holding its pre-cutover count — that's the leak.
+    assert all(0 <= v.refs <= b - 1 for v, b in zip(pins, before)), \
+        "failed cutover leaked source-shard Version pins"

@@ -1,0 +1,114 @@
+"""Invariant lint suite for the engine's contracts.
+
+Five AST passes over `src/` (stdlib `ast` only — the checker never
+imports the code it inspects):
+
+  immutability    published read-path objects (Version/GroupView/
+                  Superversion/SSTable) are frozen outside their owner
+                  modules
+  pins            every Version.ref()/acquire()/Superversion pin is
+                  released on all exit paths, or escapes
+  stats           device byte/latency charges go through StorageSim
+                  APIs only; Stats fields are engine-owned
+  vectorization   no Python for-loops over per-op data in registered
+                  hot functions
+  pallas          kernels don't branch in Python on tracers, call host
+                  numpy, or close over enclosing-scope names
+
+Usage:
+    python -m tools.check src            # lint the tree (exit 1 on findings)
+    python -m tools.check --self-test    # run every pass against its
+                                         # seeded-violation fixture
+    python -m tools.check --list         # describe the passes
+
+Waivers: `# lint: allow-<code>` on the flagged line or in the comment
+block directly above it (`allow-loop`, `allow-pin`, `allow-mutation`,
+`allow-stats`, `allow-pallas`).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+
+from .base import Finding, LintPass, Source
+
+__all__ = ["Finding", "LintPass", "Source", "all_passes", "run_checks",
+           "iter_py_files", "self_test"]
+
+_EXPECT_RE = re.compile(r"#\s*EXPECT:\s*([\w-]+)")
+
+
+def all_passes() -> list[LintPass]:
+    from .immutability import ImmutabilityPass
+    from .pallas_purity import PallasPurityPass
+    from .pins import PinReleasePass
+    from .stats_discipline import StatsDisciplinePass
+    from .vectorization import VectorizationPass
+    return [ImmutabilityPass(), PinReleasePass(), StatsDisciplinePass(),
+            VectorizationPass(), PallasPurityPass()]
+
+
+def iter_py_files(paths) -> list[pathlib.Path]:
+    files: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            files.extend(sorted(q for q in p.rglob("*.py")
+                                if "__pycache__" not in q.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def run_checks(paths, passes: list[LintPass] | None = None) -> list[Finding]:
+    passes = all_passes() if passes is None else passes
+    findings: list[Finding] = []
+    for path in iter_py_files(paths):
+        src = Source(path)
+        for p in passes:
+            findings.extend(p.run(src))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.pass_name))
+
+
+def _fixture_pairs() -> list[tuple[LintPass, str]]:
+    from .immutability import ImmutabilityPass
+    from .pallas_purity import PallasPurityPass
+    from .pins import PinReleasePass
+    from .stats_discipline import StatsDisciplinePass
+    from .vectorization import VectorizationPass
+    return [
+        (ImmutabilityPass(), "immutability_cases.py"),
+        (PinReleasePass(), "pins_cases.py"),
+        (StatsDisciplinePass(), "stats_cases.py"),
+        # fixture registers its own hot functions in place of the real
+        # runner/router/scan registry
+        (VectorizationPass(hot={"vectorization_cases.py":
+                                {"hot_driver", "hot_router"}}),
+         "vectorization_cases.py"),
+        (PallasPurityPass(), "pallas_cases.py"),
+    ]
+
+
+def self_test() -> tuple[int, list[str]]:
+    """Run every pass against its fixture; each `# EXPECT: <pass>` line
+    must be flagged, and no unmarked line may be.  Returns
+    (checks_run, error strings)."""
+    fixture_dir = pathlib.Path(__file__).parent / "fixtures"
+    errors: list[str] = []
+    checks = 0
+    for pass_obj, fname in _fixture_pairs():
+        src = Source(fixture_dir / fname)
+        expected = set()
+        for i, line in enumerate(src.lines, 1):
+            m = _EXPECT_RE.search(line)
+            if m and m.group(1) == pass_obj.name:
+                expected.add(i)
+        got = {f.line: f for f in pass_obj.run(src)}
+        checks += 1
+        for line_no in sorted(expected - set(got)):
+            errors.append(f"{fname}:{line_no}: [{pass_obj.name}] seeded "
+                          f"violation NOT detected")
+        for line_no in sorted(set(got) - expected):
+            errors.append(f"{fname}:{line_no}: [{pass_obj.name}] false "
+                          f"positive: {got[line_no].message}")
+    return checks, errors

@@ -1,0 +1,48 @@
+"""CLI for the invariant lint suite.  `python -m tools.check --help`."""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import all_passes, iter_py_files, run_checks, self_test
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.check",
+        description="AST lint suite for the engine's invariants")
+    ap.add_argument("paths", nargs="*",
+                    help="files or directories to lint (default: src)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run each pass against its seeded-violation fixture")
+    ap.add_argument("--list", action="store_true",
+                    help="list the passes and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for p in all_passes():
+            print(f"{p.name:14s} {p.description}")
+        return 0
+
+    rc = 0
+    if args.self_test:
+        checks, errors = self_test()
+        for e in errors:
+            print(e)
+        print(f"self-test: {checks} fixtures, {len(errors)} failures")
+        if errors:
+            rc = 1
+        if not args.paths:
+            return rc
+
+    paths = args.paths or ["src"]
+    findings = run_checks(paths)
+    for f in findings:
+        print(f)
+    n_files = len(iter_py_files(paths))
+    print(f"checked {n_files} files: {len(findings)} finding(s)")
+    return 1 if findings else rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,101 @@
+"""Shared plumbing for the invariant lint suite.
+
+Everything here is plain-stdlib `ast` analysis: the checker never
+imports the code under inspection, so it is safe to run over fixture
+files with seeded violations and over modules whose imports (jax,
+hypothesis) may be absent.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+import dataclasses
+import pathlib
+
+BUILTIN_NAMES = frozenset(dir(builtins)) | {"__name__", "__file__", "__doc__"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line."""
+
+    pass_name: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.pass_name}] {self.message}"
+
+
+class Source:
+    """A parsed module plus the raw text needed for waiver lookups."""
+
+    def __init__(self, path: pathlib.Path | str, text: str | None = None):
+        self.path = pathlib.Path(path)
+        self.rel = self.path.as_posix()
+        self.text = self.path.read_text() if text is None else text
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=self.rel)
+
+    def matches(self, *suffixes: str) -> bool:
+        """True when the file path ends with any of the given suffixes."""
+        return any(self.rel.endswith(s) for s in suffixes)
+
+    def waived(self, lineno: int, code: str) -> bool:
+        """Waiver lookup: `# lint: allow-<code>` on the flagged line or in
+        the contiguous comment block directly above it."""
+        tag = f"lint: allow-{code}"
+        if 1 <= lineno <= len(self.lines) and tag in self.lines[lineno - 1]:
+            return True
+        ln = lineno - 1
+        while ln >= 1 and self.lines[ln - 1].strip().startswith("#"):
+            if tag in self.lines[ln - 1]:
+                return True
+            ln -= 1
+        return False
+
+
+class LintPass:
+    """Base class: subclasses set `name`/`description` and implement run()."""
+
+    name = "?"
+    description = "?"
+
+    def run(self, src: Source) -> list[Finding]:
+        raise NotImplementedError
+
+    def finding(self, src: Source, node: ast.AST | int, message: str) -> Finding:
+        line = node if isinstance(node, int) else getattr(node, "lineno", 0)
+        return Finding(self.name, src.rel, line, message)
+
+
+def parent_map(root: ast.AST) -> dict[ast.AST, ast.AST]:
+    """child -> parent for every node under `root`."""
+    return {
+        child: parent
+        for parent in ast.walk(root)
+        for child in ast.iter_child_nodes(parent)
+    }
+
+
+def functions_of(tree: ast.AST):
+    """Yield every FunctionDef/AsyncFunctionDef in the module, including
+    methods and nested functions (each is analysed as its own scope)."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """All Name identifiers loaded or stored anywhere under `node`."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def call_name(call: ast.Call) -> str | None:
+    """`foo(...)` -> "foo"; `x.foo(...)` -> "foo"; else None."""
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None

@@ -1,0 +1,88 @@
+"""Seeded violations for the `immutability` pass.
+
+Self-test data for `python -m tools.check --self-test`; this file is
+parsed, never imported.  Lines the pass must flag carry the marker
+comment; everything else must stay clean.
+"""
+from repro.core.sstable import SSTable, split_into_sstables
+from repro.core.version import GroupView, Superversion, Version
+
+
+def bad_annotated_store(v: Version) -> None:
+    v.refs = 0  # EXPECT: immutability
+    v.vid = 7  # EXPECT: immutability
+
+
+def bad_constructed():
+    v = Version([[]], 0)
+    v.levels = []  # EXPECT: immutability
+    v.levels.append([])  # EXPECT: immutability
+    v.levels[0] = []  # EXPECT: immutability
+    return v
+
+
+def bad_pin_alias(db, pins: list):
+    v = db.version.ref()
+    v.refs += 1  # EXPECT: immutability
+    pins.append(v)
+
+
+def bad_attr_producer(sv: Superversion):
+    v = sv.version
+    v._fences = {}  # EXPECT: immutability
+
+
+def bad_sstable_batch(inputs: list[SSTable], extra, tgt: str):
+    all_inputs = inputs + extra
+    for s in all_inputs:
+        s.tier = tgt  # EXPECT: immutability
+
+
+def bad_split_output(keys, seqs, vlens):
+    outs = split_into_sstables(keys, seqs, vlens, "FD", 0, 0, 1 << 20)
+    for s in outs:
+        s.level = 3  # EXPECT: immutability
+    return outs
+
+
+def bad_superversion(sv: Superversion):
+    sv._released = True  # EXPECT: immutability
+
+
+def bad_view(view: GroupView):
+    view.sst_pris = None  # EXPECT: immutability
+
+
+def bad_hc_untyped(mystery):
+    mystery.being_compacted = True  # EXPECT: immutability
+
+
+def ok_sanctioned_mutators(s: SSTable, view: GroupView):
+    # the sanctioned SSTable mutators are method calls, not stores
+    s.mark_compacting()
+    s.finish_compaction()
+    s.retarget(tier="SD", level=4)
+    return view.point_find(3)
+
+
+def ok_untyped_non_hc(x):
+    # untyped receiver + attribute name that isn't unique to the
+    # protected classes: not guessed at
+    x.tier = "FD"
+    x.payload = 3
+
+
+def ok_fresh_copies(v: Version):
+    # building a *new* levels list from an old version is the sanctioned
+    # copy-on-write idiom
+    levels = [list(lvl) for lvl in v.levels]
+    levels[0] = []
+    return levels
+
+
+class NotProtected:
+    """Unrelated class reusing a protected attribute name on self."""
+
+    def __init__(self):
+        self.bloom = object()
+        self.record_count = 0

@@ -1,0 +1,48 @@
+"""Seeded violations for the `pallas` pass.
+
+Self-test data; parsed, never imported (the checker never executes
+fixture code, so the jax imports below are inert text).
+"""
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SCALE = 2.0
+
+
+def _bad_kernel(x_ref, o_ref, *, block):
+    x = x_ref[...]
+    if x.sum() > 0:  # EXPECT: pallas
+        x = x * SCALE
+    host = np.asarray(x)  # EXPECT: pallas
+    o_ref[...] = jnp.asarray(host) * leak_factor  # EXPECT: pallas
+
+
+def bad_loop_kernel(x_ref, o_ref, *, n):
+    acc = x_ref[0]
+    for i in range(acc):  # EXPECT: pallas
+        acc = acc + x_ref[i]
+    steps = n
+    while steps > 0:  # static kwonly bound: fine
+        steps = steps - 1
+    o_ref[0] = acc
+
+
+def _good_kernel(x_ref, o_ref, *, scale, square):
+    x = x_ref[...].astype(jnp.float32)
+    if square:  # static kwonly branch: the sanctioned specialization idiom
+        x = x * x
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] = (x * scale * SCALE).astype(o_ref.dtype)
+
+
+def launch(x, *, scale=1.0):
+    kernel = functools.partial(_good_kernel, scale=scale, square=False)
+    return pl.pallas_call(kernel, out_shape=None)(x)

@@ -1,0 +1,63 @@
+"""Seeded violations for the `pins` pass.
+
+Self-test data; parsed, never imported.
+"""
+from repro.core.version import Superversion, pinned
+
+
+def bad_leak(db):
+    v = db.version.ref()  # EXPECT: pins
+    return len(v.levels)
+
+
+def bad_no_finally(db):
+    v = db.version.acquire()  # EXPECT: pins
+    n = len(v.levels)
+    v.unref()
+    return n
+
+
+def bad_superversion_no_finally(db):
+    sv = Superversion(db.version.ref(), [])  # EXPECT: pins
+    n = sv.version.vid
+    sv.release()
+    return n
+
+
+def bad_conditional_release(db, want):
+    v = db.version.ref()  # EXPECT: pins
+    if want:
+        v.unref()
+
+
+def ok_try_finally(db):
+    v = db.version.ref()
+    try:
+        return len(v.levels)
+    finally:
+        v.unref()
+
+
+def ok_context_manager(db):
+    with pinned(db.version) as v:
+        return len(v.levels)
+
+
+def ok_escape_into_container(db, pins: list):
+    v = db.version.ref()
+    pins.append(v)
+
+
+def ok_escape_return(db):
+    sv = Superversion(db.version.ref(), [])
+    return sv
+
+
+def ok_escape_call(db, registry):
+    v = db.version.ref()
+    registry.adopt(v)
+
+
+def ok_escape_attr_store(db, job):
+    v = db.version.ref()
+    job.pin = v

@@ -1,0 +1,42 @@
+"""Seeded violations for the `stats` pass.
+
+Self-test data; parsed, never imported.  Note the fixture path is
+outside both core/storage.py and src/repro/core/, so every owner
+exemption is off.
+"""
+
+
+def bad_device_counter_writes(storage):
+    d = storage.dev["FD"]
+    d.fg_time += 0.5  # EXPECT: stats
+    d.read_bytes = 0  # EXPECT: stats
+    d.rand_reads += 1  # EXPECT: stats
+
+
+def bad_private_charge(storage):
+    storage._charge("FD", 1.0, True, "get")  # EXPECT: stats
+
+
+def bad_engine_stats_writes(db):
+    db.stats.gets = 0  # EXPECT: stats
+    db._corrections.scans -= 1  # EXPECT: stats
+
+
+def bad_component_surgery(storage):
+    storage.by_component["get"] = {}  # EXPECT: stats
+    storage.by_component.clear()  # EXPECT: stats
+
+
+def ok_reads_and_public_apis(storage, db):
+    busy = sum(d.fg_time for d in storage.dev.values())
+    storage.seq_read("FD", 4096, fg=True, component="scan")
+    storage.rand_read("SD", 4096, fg=True, component="get")
+    storage.seq_write("FD", 4096, fg=False, component="flush")
+    comp = storage.by_component.get("migration", {})
+    return db.stats.gets + busy + comp.get("read_bytes", 0)
+
+
+def ok_own_fields(tracker):
+    # attribute names outside the device-counter set are not guessed at
+    tracker.total_reads = 0
+    tracker.stats = None

@@ -1,0 +1,32 @@
+"""Seeded violations for the `vectorization` pass.
+
+Self-test data; parsed, never imported.  The self-test registers
+`hot_driver` and `hot_router` as this file's hot functions (the real
+registry in tools/check/vectorization.py names the workload driver,
+the shard router, and the merge-scan assembly).
+"""
+import numpy as np
+
+
+def hot_driver(ops, keys, db):
+    for j in range(len(ops)):  # EXPECT: vectorization
+        db.get(int(keys[j]))
+
+
+def hot_router(keys, bounds):
+    out = []
+    for k in keys:  # EXPECT: vectorization
+        out.append(int(np.searchsorted(bounds, k)))
+    # lint: allow-loop (two fixed tiers — topology-bounded, not per-key)
+    for tier in ("FD", "SD"):
+        out.append(tier)
+    sids = np.searchsorted(bounds, keys, side="right")
+    return out, sids
+
+
+def cold_helper(keys):
+    # not registered as hot: loops here are nobody's business
+    total = 0
+    for k in keys:
+        total += k
+    return total

@@ -1,0 +1,237 @@
+"""Pass 1 — immutability of published read-path objects.
+
+`Version`, `GroupView`, `Superversion`, and `SSTable` instances are
+shared across concurrent readers without locks; the whole versioned
+read path (docs/ARCHITECTURE.md) rests on them being frozen once
+published.  Only their owner modules (`core/version.py`,
+`core/sstable.py`) may mutate them — everyone else goes through the
+sanctioned mutator methods (`SSTable.retarget`, `mark_compacting`,
+`finish_compaction`) or builds fresh instances.
+
+Detection is two-layered, both flow-insensitive per function scope:
+
+* **Typed receivers** — a cheap local type inference marks variables
+  that provably hold a protected instance (constructor calls,
+  `.ref()`/`.acquire()`, `split_into_sstables(...)` lists, `x.version`
+  reads, annotations).  Any attribute store, augmented store,
+  subscript store into an attribute, or mutating container-method call
+  through a typed receiver is a violation.
+* **High-confidence attributes** — attribute names that exist only on
+  the protected classes (`refs`, `vid`, `being_compacted`, ...) are
+  flagged on *any* non-`self` receiver, catching aliases the inference
+  cannot follow.  `self.<attr>` stores are exempt unless the enclosing
+  class is itself one of the protected classes (subclass __init__ of an
+  unrelated class may reuse a name, e.g. `RaltRun.bloom`).
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, LintPass, Source, parent_map
+
+PROTECTED = {"Version", "GroupView", "Superversion", "SSTable"}
+OWNER_MODULES = ("core/version.py", "core/sstable.py")
+
+# value-producer tables for the local type inference
+CONSTRUCTORS = {c: c for c in PROTECTED}
+METHOD_PRODUCERS = {"ref": "Version", "acquire": "Version",
+                    "_make_version": "Version"}
+LIST_PRODUCERS = {"split_into_sstables": "SSTable"}
+ATTR_PRODUCERS = {"version": "Version"}
+
+MUTATING_METHODS = {"append", "extend", "insert", "pop", "remove", "clear",
+                    "sort", "reverse", "update", "setdefault", "popitem",
+                    "add", "discard"}
+
+# Attributes unique to the protected classes across the tree.  Names that
+# collide with unrelated classes (tier, level, keys, seqs, vlens, sig,
+# src, version, imm_memtables, ...) are deliberately absent — those are
+# only caught through typed receivers.
+HC_ATTRS = {
+    "refs", "vid", "levels", "_fences", "_sigs",            # Version
+    "being_compacted", "compacted", "bloom", "block_of",    # SSTable
+    "n_blocks", "record_bytes",
+    "sst_mins", "sst_maxs", "sst_pris", "n_source_records",  # GroupView
+    "_released",                                             # Superversion
+}
+
+
+def _ann_type(ann: ast.AST | None) -> tuple[str | None, str | None]:
+    """(scalar_type, list_elem_type) from an annotation node."""
+    if ann is None:
+        return None, None
+    if isinstance(ann, ast.Name) and ann.id in PROTECTED:
+        return ann.id, None
+    if (isinstance(ann, ast.Subscript)
+            and isinstance(ann.value, ast.Name)
+            and ann.value.id in ("list", "List", "Sequence", "Iterable")
+            and isinstance(ann.slice, ast.Name)
+            and ann.slice.id in PROTECTED):
+        return None, ann.slice.id
+    # Optional[X] / X | None
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        for side in (ann.left, ann.right):
+            t, lt = _ann_type(side)
+            if t or lt:
+                return t, lt
+    return None, None
+
+
+def _value_type(value: ast.AST, lists: dict[str, str]) -> tuple[str | None, str | None]:
+    """Infer (scalar, list-elem) type of an expression, if provable."""
+    if isinstance(value, ast.Call):
+        if isinstance(value.func, ast.Name):
+            if value.func.id in CONSTRUCTORS:
+                return CONSTRUCTORS[value.func.id], None
+            if value.func.id in LIST_PRODUCERS:
+                return None, LIST_PRODUCERS[value.func.id]
+        if isinstance(value.func, ast.Attribute):
+            if value.func.attr in METHOD_PRODUCERS:
+                return METHOD_PRODUCERS[value.func.attr], None
+            if value.func.attr in LIST_PRODUCERS:
+                return None, LIST_PRODUCERS[value.func.attr]
+    if isinstance(value, ast.Attribute) and value.attr in ATTR_PRODUCERS:
+        return ATTR_PRODUCERS[value.attr], None
+    if isinstance(value, ast.BinOp) and isinstance(value.op, ast.Add):
+        # list concatenation propagates the element type from either side
+        for side in (value.left, value.right):
+            if isinstance(side, ast.Name) and side.id in lists:
+                return None, lists[side.id]
+    if isinstance(value, ast.Name) and value.id in lists:
+        return None, lists[value.id]
+    return None, None
+
+
+def _infer_scope(fn: ast.FunctionDef) -> dict[str, str]:
+    """var name -> protected class for this function, flow-insensitive."""
+    types: dict[str, str] = {}
+    lists: dict[str, str] = {}
+    args = fn.args
+    for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+        t, lt = _ann_type(a.annotation)
+        if t:
+            types[a.arg] = t
+        if lt:
+            lists[a.arg] = lt
+    # iterate to a fixpoint so chains like  a = inputs + nexts;
+    # for s in a: ...  resolve regardless of statement order
+    for _ in range(4):
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                t, lt = _value_type(node.value, lists)
+                name = node.targets[0].id
+                if t and types.get(name) != t:
+                    types[name] = t
+                    changed = True
+                if lt and lists.get(name) != lt:
+                    lists[name] = lt
+                    changed = True
+            elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+                t, lt = _ann_type(node.annotation)
+                if not (t or lt):
+                    t, lt = _value_type(node.value, lists) if node.value else (None, None)
+                if t and types.get(node.target.id) != t:
+                    types[node.target.id] = t
+                    changed = True
+                if lt and lists.get(node.target.id) != lt:
+                    lists[node.target.id] = lt
+                    changed = True
+            elif isinstance(node, ast.For) and isinstance(node.target, ast.Name) \
+                    and isinstance(node.iter, ast.Name) and node.iter.id in lists:
+                if types.get(node.target.id) != lists[node.iter.id]:
+                    types[node.target.id] = lists[node.iter.id]
+                    changed = True
+        if not changed:
+            break
+    return types
+
+
+class ImmutabilityPass(LintPass):
+    name = "immutability"
+    description = ("no attribute stores or in-place mutation on "
+                   "Version/GroupView/Superversion/SSTable outside their "
+                   "owner modules")
+
+    def __init__(self, owner_modules: tuple[str, ...] = OWNER_MODULES):
+        self.owner_modules = owner_modules
+
+    def run(self, src: Source) -> list[Finding]:
+        if src.matches(*self.owner_modules):
+            return []
+        parents = parent_map(src.tree)
+        found: dict[tuple[int, str], Finding] = {}
+
+        def report(node: ast.AST, what: str, msg: str) -> None:
+            key = (node.lineno, what)
+            if key not in found and not src.waived(node.lineno, "mutation"):
+                found[key] = self.finding(src, node, msg)
+
+        def enclosing_class(node: ast.AST) -> str | None:
+            cur = parents.get(node)
+            while cur is not None:
+                if isinstance(cur, ast.ClassDef):
+                    return cur.name
+                cur = parents.get(cur)
+            return None
+
+        def check_store_target(target: ast.AST, types: dict[str, str],
+                               aug: bool = False) -> None:
+            verb = "augmented store" if aug else "store"
+            # x.attr = ... / x.attr += ...
+            if isinstance(target, ast.Attribute):
+                recv = target.value
+                if isinstance(recv, ast.Name):
+                    if recv.id in types:
+                        report(target, f"{recv.id}.{target.attr}",
+                               f"{verb} to {types[recv.id]} attribute "
+                               f"'{target.attr}' via '{recv.id}' outside "
+                               f"owner module")
+                    elif target.attr in HC_ATTRS and recv.id != "self":
+                        report(target, f"{recv.id}.{target.attr}",
+                               f"{verb} to protected attribute "
+                               f"'{target.attr}' (owned by an immutable "
+                               f"read-path class) outside owner module")
+                    elif target.attr in HC_ATTRS and recv.id == "self" \
+                            and enclosing_class(target) in PROTECTED:
+                        report(target, f"self.{target.attr}",
+                               f"{verb} to protected attribute "
+                               f"'{target.attr}' from a protected class "
+                               f"defined outside its owner module")
+            # x.attr[i] = ...  (e.g. v.levels[0] = ...)
+            if isinstance(target, ast.Subscript) and isinstance(target.value, ast.Attribute):
+                inner = target.value
+                if isinstance(inner.value, ast.Name):
+                    recv = inner.value
+                    if recv.id in types or (inner.attr in HC_ATTRS and recv.id != "self"):
+                        report(target, f"{recv.id}.{inner.attr}[]",
+                               f"subscript {verb} into protected attribute "
+                               f"'{inner.attr}' outside owner module")
+
+        for fn in [src.tree] + [n for n in ast.walk(src.tree)
+                                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+            types = _infer_scope(fn) if not isinstance(fn, ast.Module) else {}
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        check_store_target(t, types)
+                elif isinstance(node, ast.AugAssign):
+                    check_store_target(node.target, types, aug=True)
+                elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                    check_store_target(node.target, types)
+                elif isinstance(node, ast.Delete):
+                    for t in node.targets:
+                        check_store_target(t, types)
+                elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in MUTATING_METHODS \
+                        and isinstance(node.func.value, ast.Attribute) \
+                        and isinstance(node.func.value.value, ast.Name):
+                    recv = node.func.value.value
+                    attr = node.func.value.attr
+                    if recv.id in types or (attr in HC_ATTRS and recv.id != "self"):
+                        report(node, f"{recv.id}.{attr}.{node.func.attr}",
+                               f"in-place mutation '{node.func.attr}()' of "
+                               f"protected attribute '{attr}' outside owner "
+                               f"module")
+        return sorted(found.values(), key=lambda f: f.line)

@@ -1,0 +1,225 @@
+"""Pass 5 — Pallas kernel purity.
+
+Kernel bodies handed to `pl.pallas_call` execute inside the Mosaic
+trace: every value flowing from a `*_ref` parameter or `pl.program_id`
+is a tracer.  Three classes of bug survive until trace/compile time (or
+worse, silently miscompute under vmap/grad):
+
+* **Python control flow on traced values** — `if`/`while`/`for` whose
+  test or iterable depends on ref data.  Predication must go through
+  `pl.when` / `jnp.where` / `lax.cond`.  Branching on *static* kwonly
+  params (bound via `functools.partial` before `pallas_call`) is the
+  sanctioned specialization idiom and is not flagged.
+* **Host numpy inside the kernel** — `np.*` calls materialise tracers
+  on the host; only `jnp`/`lax`/`pl` belong in a kernel body.
+* **Closure over enclosing-scope names** — a kernel may reference its
+  parameters, its own locals, and module-level constants; anything else
+  (an outer function's local, an unbound name) is a staging hazard:
+  the value is baked in at trace time and goes stale on retrace.
+
+Kernels are detected two ways: any function whose positional parameters
+include a `*_ref` name, and any function passed (directly or through a
+`functools.partial`) as the first argument of a `pallas_call`.  The
+pass only runs on modules that textually import pallas.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import BUILTIN_NAMES, Finding, LintPass, Source
+
+JAX_MODULES = {"jnp", "jax", "pl", "lax", "pltpu", "functools", "math"}
+
+
+def _imports_pallas(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            if node.module and "pallas" in node.module:
+                return True
+            if any("pallas" in a.name for a in node.names):
+                return True
+        if isinstance(node, ast.Import):
+            if any("pallas" in a.name for a in node.names):
+                return True
+    return False
+
+
+def _module_names(tree: ast.Module) -> set[str]:
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+                elif isinstance(t, ast.Tuple):
+                    names.update(e.id for e in t.elts if isinstance(e, ast.Name))
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, ast.Import):
+            names.update((a.asname or a.name.split(".")[0]) for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            names.update((a.asname or a.name) for a in node.names)
+        elif isinstance(node, (ast.If, ast.Try)):
+            # guarded imports / fallbacks
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Import):
+                    names.update((a.asname or a.name.split(".")[0]) for a in sub.names)
+                elif isinstance(sub, ast.ImportFrom):
+                    names.update((a.asname or a.name) for a in sub.names)
+                elif isinstance(sub, ast.Assign):
+                    names.update(t.id for t in sub.targets if isinstance(t, ast.Name))
+    return names
+
+
+def _find_kernels(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    """name -> FunctionDef for every kernel in the module."""
+    defs = {n.name: n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef)}
+    kernels: dict[str, ast.FunctionDef] = {}
+    # heuristic 1: *_ref positional parameters
+    for name, fn in defs.items():
+        pos = fn.args.posonlyargs + fn.args.args
+        if any(a.arg.endswith("_ref") for a in pos):
+            kernels[name] = fn
+    # heuristic 2: first argument of pallas_call, through partial()
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Call):
+            fname = node.value.func
+            is_partial = (isinstance(fname, ast.Name) and fname.id == "partial") or \
+                (isinstance(fname, ast.Attribute) and fname.attr == "partial")
+            if is_partial and node.value.args \
+                    and isinstance(node.value.args[0], ast.Name):
+                partial_of[node.targets[0].id] = node.value.args[0].id
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+                and node.func.attr == "pallas_call" and node.args:
+            arg0 = node.args[0]
+            target: str | None = None
+            if isinstance(arg0, ast.Name):
+                target = partial_of.get(arg0.id, arg0.id)
+            elif isinstance(arg0, ast.Call):
+                fname = arg0.func
+                is_partial = (isinstance(fname, ast.Name) and fname.id == "partial") or \
+                    (isinstance(fname, ast.Attribute) and fname.attr == "partial")
+                if is_partial and arg0.args and isinstance(arg0.args[0], ast.Name):
+                    target = arg0.args[0].id
+            if target in defs:
+                kernels[target] = defs[target]
+    return kernels
+
+
+def _local_names(fn: ast.FunctionDef) -> set[str]:
+    """Everything bound inside the kernel: params, assignment targets,
+    loop/with/except targets, nested defs and their params, comprehension
+    variables."""
+    names: set[str] = set()
+    a = fn.args
+    for arg in a.posonlyargs + a.args + a.kwonlyargs:
+        names.add(arg.arg)
+    if a.vararg:
+        names.add(a.vararg.arg)
+    if a.kwarg:
+        names.add(a.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, (ast.Store, ast.Del)):
+            names.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            names.add(node.name)
+            na = node.args
+            for arg in na.posonlyargs + na.args + na.kwonlyargs:
+                names.add(arg.arg)
+        elif isinstance(node, ast.ExceptHandler) and node.name:
+            names.add(node.name)
+    return names
+
+
+def _tainted_names(fn: ast.FunctionDef) -> set[str]:
+    """Names that (may) hold tracers: positional `*_ref`-style params and
+    anything transitively computed from them or from pl.program_id."""
+    tainted = {a.arg for a in fn.args.posonlyargs + fn.args.args}
+
+    def value_tainted(value: ast.AST) -> bool:
+        for n in ast.walk(value):
+            if isinstance(n, ast.Name) and n.id in tainted:
+                return True
+            if isinstance(n, ast.Attribute) and n.attr == "program_id":
+                return True
+        return False
+
+    for _ in range(8):  # fixpoint over flow-insensitive assignments
+        changed = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                if value_tainted(node.value):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name) and n.id not in tainted:
+                                tainted.add(n.id)
+                                changed = True
+            elif isinstance(node, ast.AugAssign) and isinstance(node.target, ast.Name):
+                if value_tainted(node.value) and node.target.id not in tainted:
+                    tainted.add(node.target.id)
+                    changed = True
+        if not changed:
+            break
+    return tainted
+
+
+class PallasPurityPass(LintPass):
+    name = "pallas"
+    description = ("kernels must not branch in Python on traced values, call "
+                   "host numpy, or close over enclosing-scope names")
+
+    def run(self, src: Source) -> list[Finding]:
+        if not (_imports_pallas(src.tree) or "/kernels/" in src.rel):
+            return []
+        module_names = _module_names(src.tree)
+        findings: list[Finding] = []
+        for kname, fn in sorted(_find_kernels(src.tree).items()):
+            tainted = _tainted_names(fn)
+            locals_ = _local_names(fn)
+            known = locals_ | module_names | BUILTIN_NAMES
+            seen: set[tuple[int, str]] = set()
+
+            def report(node: ast.AST, key: str, msg: str) -> None:
+                k = (node.lineno, key)
+                if k not in seen and not src.waived(node.lineno, "pallas"):
+                    seen.add(k)
+                    findings.append(self.finding(src, node, msg))
+
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                    if node.id in ("np", "numpy"):
+                        report(node, "np",
+                               f"host numpy used inside kernel '{kname}' — "
+                               f"use jnp/lax; numpy materialises tracers")
+                    elif node.id not in known:
+                        report(node, node.id,
+                               f"kernel '{kname}' closes over enclosing-scope "
+                               f"name '{node.id}' — pass it as a static "
+                               f"kwonly param via functools.partial")
+                elif isinstance(node, (ast.If, ast.While)):
+                    test_names = {n.id for n in ast.walk(node.test)
+                                  if isinstance(n, ast.Name)}
+                    hot = test_names & tainted
+                    if hot:
+                        kind = "if" if isinstance(node, ast.If) else "while"
+                        report(node, kind,
+                               f"Python '{kind}' on traced value(s) "
+                               f"{sorted(hot)} in kernel '{kname}' — use "
+                               f"pl.when / jnp.where / lax.cond")
+                elif isinstance(node, ast.For):
+                    iter_names = {n.id for n in ast.walk(node.iter)
+                                  if isinstance(n, ast.Name)}
+                    hot = iter_names & tainted
+                    if hot:
+                        report(node, "for",
+                               f"Python 'for' over traced value(s) "
+                               f"{sorted(hot)} in kernel '{kname}' — use "
+                               f"lax.fori_loop or grid iteration")
+        return findings

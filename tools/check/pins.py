@@ -1,0 +1,122 @@
+"""Pass 2 — pin/release pairing for Version refs and Superversions.
+
+A `Version.ref()` / `Version.acquire()` / `Superversion(...)` acquired
+in a function body MUST either
+
+* be released on **all** exit paths — i.e. the matching
+  `unref()`/`release()` sits in a `try/finally` finalbody (the
+  `core.version.pinned()` context manager is the preferred spelling and
+  needs no analysis: the pin never binds to a bare local), or
+* escape the function (returned, yielded, stored into a container or
+  attribute, passed to another call) — ownership transfers and the
+  receiver is responsible.
+
+A pin that is acquired, used, and dropped without a guaranteed release
+is exactly the class of leak that froze compaction inputs in the PR-5
+repartitioner (`Repartitioner._cutover` pre-fix): an exception between
+acquire and release leaked the ref and pinned every SSTable of the old
+topology for the life of the process.
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, LintPass, Source, parent_map
+
+ACQUIRE_METHODS = {"ref", "acquire"}
+RELEASE_METHODS = {"unref", "release"}
+PIN_CONSTRUCTORS = {"Superversion"}
+
+
+def _is_acquire(value: ast.AST) -> str | None:
+    """Return a description when `value` acquires a pin."""
+    if not isinstance(value, ast.Call):
+        return None
+    if isinstance(value.func, ast.Attribute) and value.func.attr in ACQUIRE_METHODS:
+        return f".{value.func.attr}()"
+    if isinstance(value.func, ast.Name) and value.func.id in PIN_CONSTRUCTORS:
+        return f"{value.func.id}(...)"
+    return None
+
+
+class PinReleasePass(LintPass):
+    name = "pins"
+    description = ("every Version.ref()/acquire()/Superversion pin must be "
+                   "released on all exit paths or escape the function")
+
+    def run(self, src: Source) -> list[Finding]:
+        findings: dict[tuple[int, str], Finding] = {}
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            # nested defs are walked both standalone and from the enclosing
+            # scope; keep the first (outer) verdict per acquisition site
+            for f in self._check_function(src, fn):
+                findings.setdefault((f.line, f.message), f)
+        return sorted(findings.values(), key=lambda f: f.line)
+
+    def _check_function(self, src: Source, fn: ast.AST) -> list[Finding]:
+        parents = parent_map(fn)
+        # nodes guaranteed to run on exception paths
+        final_nodes: set[ast.AST] = set()
+        for t in ast.walk(fn):
+            if isinstance(t, ast.Try):
+                for stmt in t.finalbody:
+                    final_nodes.update(ast.walk(stmt))
+
+        # pin acquisitions bound to a plain local:  v = x.ref()
+        pins: dict[str, tuple[ast.AST, str]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not fn:
+                continue
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                how = _is_acquire(node.value)
+                if how:
+                    pins[node.targets[0].id] = (node, how)
+
+        findings = []
+        for name, (assign, how) in pins.items():
+            released, released_in_finally, escapes = False, False, False
+            for node in ast.walk(fn):
+                if node is assign or (isinstance(node, ast.Name) and node is assign.targets[0]):
+                    continue
+                if not (isinstance(node, ast.Name) and node.id == name):
+                    continue
+                parent = parents.get(node)
+                if isinstance(parent, ast.Attribute):
+                    # receiver use: v.levels / v.unref() — a method call?
+                    gp = parents.get(parent)
+                    if isinstance(gp, ast.Call) and gp.func is parent \
+                            and parent.attr in RELEASE_METHODS:
+                        released = True
+                        if gp in final_nodes:
+                            released_in_finally = True
+                    continue
+                if isinstance(parent, ast.Call) and node is not parent.func:
+                    escapes = True          # passed to another callable
+                elif isinstance(parent, (ast.Return, ast.Yield, ast.YieldFrom,
+                                         ast.List, ast.Tuple, ast.Set, ast.Dict,
+                                         ast.Starred, ast.Await)):
+                    escapes = True
+                elif isinstance(parent, ast.Assign) and node is parent.value:
+                    escapes = True          # aliased / stored elsewhere
+                elif isinstance(parent, ast.keyword):
+                    escapes = True
+                elif isinstance(parent, (ast.comprehension, ast.GeneratorExp,
+                                         ast.ListComp, ast.SetComp, ast.DictComp)):
+                    escapes = True
+            if escapes or src.waived(assign.lineno, "pin"):
+                continue
+            if not released:
+                findings.append(self.finding(
+                    src, assign,
+                    f"pin '{name}' acquired via {how} is never released "
+                    f"(no unref()/release() reachable in this function)"))
+            elif not released_in_finally:
+                findings.append(self.finding(
+                    src, assign,
+                    f"pin '{name}' acquired via {how} is released, but not "
+                    f"in a try/finally — an exception between acquire and "
+                    f"release leaks the ref (use core.version.pinned())"))
+        return findings

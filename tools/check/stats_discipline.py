@@ -1,0 +1,93 @@
+"""Pass 3 — stats discipline.
+
+All simulated device time/byte accounting flows through the
+`StorageSim` charge APIs (`rand_read`/`seq_read`/`seq_write`), which
+fold the cost into the per-device counters AND the per-component
+breakdown atomically.  Writing a `DeviceCounters` field directly, or
+calling the private `_charge`, from anywhere but `core/storage.py`
+desynchronises the two views and breaks the sanitizer's conservation
+invariant (sum over components == device totals).
+
+Similarly, engine-level `Stats` counters are owned by the engine: code
+outside `src/repro/core/` may read `db.stats.*` freely but must not
+write through it (`ShardedTieredLSM` aggregates shard stats on the fly;
+a write from a benchmark would silently vanish on the next aggregation).
+"""
+from __future__ import annotations
+
+import ast
+
+from .base import Finding, LintPass, Source
+
+DEVICE_FIELDS = {"fg_time", "bg_time", "read_bytes", "write_bytes",
+                 "rand_reads", "_wall"}
+CHARGE_OWNER = ("core/storage.py",)
+STATS_OWNER_DIR = "repro/core/"
+MUTATING_METHODS = {"setdefault", "update", "clear", "pop", "popitem"}
+
+
+class StatsDisciplinePass(LintPass):
+    name = "stats"
+    description = ("device byte/latency counters may only be charged through "
+                   "StorageSim APIs; Stats fields are engine-owned")
+
+    def __init__(self, charge_owner: tuple[str, ...] = CHARGE_OWNER,
+                 stats_owner_dir: str = STATS_OWNER_DIR):
+        self.charge_owner = charge_owner
+        self.stats_owner_dir = stats_owner_dir
+
+    def run(self, src: Source) -> list[Finding]:
+        in_charge_owner = src.matches(*self.charge_owner)
+        in_core = self.stats_owner_dir in src.rel
+        found: dict[tuple[int, str], Finding] = {}
+
+        def report(node: ast.AST, key: str, msg: str) -> None:
+            k = (node.lineno, key)
+            if k not in found and not src.waived(node.lineno, "stats"):
+                found[k] = self.finding(src, node, msg)
+
+        def check_target(target: ast.AST, aug: bool) -> None:
+            verb = "augmented store" if aug else "store"
+            if isinstance(target, ast.Attribute):
+                # d.fg_time = ... — device counter fields, any receiver
+                if target.attr in DEVICE_FIELDS and not in_charge_owner:
+                    report(target, target.attr,
+                           f"{verb} to device counter '{target.attr}' outside "
+                           f"core/storage.py — charge through "
+                           f"rand_read/seq_read/seq_write instead")
+                # db.stats.gets = ... — engine Stats fields, outside core/
+                if isinstance(target.value, ast.Attribute) \
+                        and target.value.attr in ("stats", "_corrections") \
+                        and not in_core:
+                    report(target, f"{target.value.attr}.{target.attr}",
+                           f"{verb} through '.{target.value.attr}."
+                           f"{target.attr}' outside src/repro/core — Stats "
+                           f"counters are engine-owned")
+            if isinstance(target, ast.Subscript) \
+                    and isinstance(target.value, ast.Attribute) \
+                    and target.value.attr == "by_component" \
+                    and not in_charge_owner:
+                report(target, "by_component[]",
+                       f"{verb} into by_component outside core/storage.py")
+
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    check_target(t, aug=False)
+            elif isinstance(node, ast.AugAssign):
+                check_target(node.target, aug=True)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                check_target(node.target, aug=False)
+            elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                if node.func.attr == "_charge" and not in_charge_owner:
+                    report(node, "_charge",
+                           "direct call to StorageSim._charge outside "
+                           "core/storage.py — use the public charge APIs")
+                elif node.func.attr in MUTATING_METHODS \
+                        and isinstance(node.func.value, ast.Attribute) \
+                        and node.func.value.attr == "by_component" \
+                        and not in_charge_owner:
+                    report(node, "by_component()",
+                           f"in-place '{node.func.attr}()' on by_component "
+                           f"outside core/storage.py")
+        return sorted(found.values(), key=lambda f: f.line)
