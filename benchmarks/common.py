@@ -10,6 +10,7 @@ accounting is reset after load so throughput reflects the run phase only
 from __future__ import annotations
 
 import io
+import json
 import os
 import pickle
 import sys
@@ -17,8 +18,9 @@ import time
 
 from repro.core import LSMConfig, ShardConfig
 from repro.core.baselines import make_system
-from repro.core.runner import db_key_count, load_db, run_workload
+from repro.core.runner import BENCH_SCHEMA, db_key_count, load_db, run_workload
 from repro.core.storage import MIB
+from repro.obs import Observability, jsonify
 
 PROFILES = {
     "quick":   dict(fd=4 * MIB, sd=40 * MIB, sstable=256 * 1024, n_ops=25_000),
@@ -124,6 +126,60 @@ DB_CACHE = LoadedDBCache()
 def emit(name: str, us_per_call: float, derived: str) -> None:
     """The harness CSV contract: name,us_per_call,derived."""
     print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+# -- observability plane (src/repro/obs) -----------------------------------
+
+def flag_value(flag: str, default: str) -> str | None:
+    """`--flag=path` -> path; bare `--flag` -> default; absent -> None."""
+    for a in sys.argv:
+        if a == flag:
+            return default
+        if a.startswith(flag + "="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def make_obs(bench: str, force: bool = False):
+    """(Observability | None, trace_path | None, metrics_path | None)
+    for a benchmark process.  `--trace[=path]` records a Perfetto trace
+    (default trace_<bench>.json); `--metrics-out[=path]` additionally
+    dumps the cadenced metrics registry.  `force=True` builds the plane
+    even without flags (smoke gates assert on span presence) — export
+    still only happens for paths the user asked for."""
+    tp = flag_value("--trace", f"trace_{bench}.json")
+    mp = flag_value("--metrics-out", f"metrics_{bench}.json")
+    if tp is None and mp is None and not force:
+        return None, None, None
+    return Observability(), tp, mp
+
+
+def finish_obs(obs, trace_path: str | None,
+               metrics_path: str | None) -> None:
+    """Export whatever the user asked for; prints the artifact paths."""
+    if obs is None:
+        return
+    obs.export(trace_path=trace_path, metrics_path=metrics_path)
+    for p in (trace_path, metrics_path):
+        if p:
+            print(f"# wrote {p}", flush=True)
+
+
+def write_bench_json(bench: str, results: dict) -> str:
+    """Every benchmark's --smoke writes BENCH_<bench>.json so CI can
+    archive machine-readable telemetry next to the CSV lines.  Values
+    that are RunResults go through their schema-versioned to_json();
+    anything else is jsonified as-is."""
+    payload = {k: (v.to_json() if hasattr(v, "to_json") else jsonify(v))
+               for k, v in results.items()}
+    path = os.path.join(os.environ.get("REPRO_BENCH_DIR", "."),
+                        f"BENCH_{bench}.json")
+    with open(path, "w") as f:
+        json.dump({"schema": BENCH_SCHEMA, "bench": bench,
+                   "profile": profile_name(), "results": payload}, f,
+                  indent=1)
+    print(f"# wrote {path}", flush=True)
+    return path
 
 
 class timer:

@@ -40,8 +40,9 @@ from repro.core import LSMConfig, ShardConfig, make_sharded_system, make_system
 from repro.core.runner import db_key_count, load_db, run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import (SHARD_POLICIES, emit, make_cfg, n_ops,
-                     sanitize_enabled, skew_shard_config)
+from .common import (SHARD_POLICIES, emit, finish_obs, make_cfg, make_obs,
+                     n_ops, sanitize_enabled, skew_shard_config,
+                     write_bench_json)
 
 N_SHARDS = 4
 HOT_FRAC = 0.05
@@ -58,7 +59,7 @@ def _loaded(cfg, scfg, value_len: int, seed: int = 0):
 
 
 def run_walk(value_len: int = 1000, tag: str = "shifting_hotspot",
-             quick: bool = False) -> dict:
+             quick: bool = False, obs=None) -> dict:
     """The walking-hotspot stage sweep over all three policies."""
     profile = "quick" if quick else None
     cfg = make_cfg(profile)
@@ -69,15 +70,18 @@ def run_walk(value_len: int = 1000, tag: str = "shifting_hotspot",
     for name, knobs in SHARD_POLICIES.items():
         scfg = skew_shard_config(nk, ops_per_stage, N_SHARDS, **knobs)
         db = _loaded(cfg, scfg, value_len)
+        if obs is not None:
+            obs.attach(db, name=name)
         window_ops = window_time = 0.0
         stage_thr = []
+        stage_p50 = []
         for si, off in enumerate(offsets):
             dist = KeyDist("hotspot", nk, hot_frac=HOT_FRAC,
                            hot_offset=float(off), scramble=False)
             wl = ycsb("RO", dist, ops_per_stage, value_len, seed=11 + si)
-            res = run_workload(db, wl, name=f"{name}/stage{si}",
-                               collect_latency=False)
+            res = run_workload(db, wl, name=f"{name}/stage{si}")
             stage_thr.append(res.throughput)
+            stage_p50.append(res.p50)
             window_ops += res.n_ops * 0.1
             window_time += res.tail_window_seconds
         overall = window_ops / max(window_time, 1e-12)
@@ -100,8 +104,36 @@ def run_walk(value_len: int = 1000, tag: str = "shifting_hotspot",
                   f"{report['checks_cutovers_checked']} cutovers, "
                   f"{report['checks_oracle']} oracle samples — clean",
                   flush=True)
-        results[name] = (overall, snap)
+        results[name] = {"throughput": overall, "snap": snap,
+                         "stage_throughput": stage_thr,
+                         "median_p50_s": float(np.median(stage_p50))}
     return results
+
+
+def trace_exercise(obs) -> None:
+    """Tiny single-node HotRAP run that provably drives all three
+    promotion pathways (retained in cross-tier compaction, promotion by
+    Get, promotion by scan), so the smoke trace always contains at
+    least one span of each even if the walk's workload shape drifts."""
+    KIB = 1024
+    cfg = LSMConfig(fd_size=256 * KIB, sd_size=4 * 1024 * KIB,
+                    target_sstable_bytes=16 * KIB, memtable_bytes=8 * KIB,
+                    block_cache_bytes=8 * KIB, hotrap=True)
+    db = make_system("hotrap", cfg, seed=0)
+    obs.attach(db, name="exercise")
+    nk = db_key_count(cfg, 120)
+    load_db(db, nk, 120, 0)
+    rng = np.random.default_rng(5)
+    hot = rng.choice(nk, size=max(nk // 20, 16), replace=False)
+    lo = int(min(nk - 40, nk // 3))
+    for _ in range(6):
+        for k in hot:                         # SD hits -> promo/get
+            db.get(int(k))
+        for _ in range(4):                    # hot range -> promo/scan
+            db.scan(lo, 32)
+        for k in rng.integers(0, nk, 200):    # churn -> cross-tier
+            db.put(int(k), 120)               # compactions, retention
+    db.flush_all()
 
 
 def equivalence_check() -> None:
@@ -156,14 +188,43 @@ def smoke() -> None:
     equivalence_check()
     print("EQUIVALENCE OK: split+merge byte-identical to oracle",
           flush=True)
-    results = run_walk(quick=True)
-    thr_arb, _ = results["arbiter"]
-    thr_rep, snap = results["repartition"]
+    # The flight recorder rides along even without --trace so the span
+    # gates below always run; the file is only written when asked for.
+    obs, trace_path, metrics_path = make_obs("shifting_hotspot",
+                                             force=True)
+    trace_exercise(obs)
+    results = run_walk(quick=True, obs=obs)
+    thr_arb = results["arbiter"]["throughput"]
+    thr_rep = results["repartition"]["throughput"]
+    snap = results["repartition"]["snap"]
     if snap is None or snap["n_splits"] < 1 or snap["n_merges"] < 1:
         failures.append(f"expected >= 1 split and >= 1 merge, got {snap}")
     if thr_rep < thr_arb:
         failures.append(f"repartition throughput {thr_rep:.0f} < "
                         f"budget-only arbiter {thr_arb:.0f}")
+    # Flight-recorder gates: all three promotion pathways + the
+    # repartition lifecycle must appear, and the trace must be
+    # schema-clean (Perfetto-loadable).
+    need = {"promo/get", "promo/scan", "promo/retained",
+            "repartition/split", "repartition/merge", "migration",
+            "cutover_stall", "flush", "compaction"}
+    missing = need - obs.tracer.names()
+    if missing:
+        failures.append(f"trace is missing event types: {sorted(missing)}")
+    problems = obs.tracer.validate()
+    if problems:
+        failures.append(f"trace schema problems: {problems[:5]}")
+    # Cutover stall gate: the router-visible pause of every atomic
+    # cutover must stay under 10x the walk's median op latency (the
+    # median is utilisation-inflated, the stall is raw foreground
+    # seconds — the conservative direction).
+    med_us = results["repartition"]["median_p50_s"] * 1e6
+    max_stall_us = snap["max_cutover_stall_fg_us"] if snap else 0.0
+    if snap and med_us > 0 and max_stall_us > 10 * med_us:
+        failures.append(f"cutover stall {max_stall_us:.1f}us > 10x "
+                        f"median op latency {med_us:.1f}us")
+    write_bench_json("shifting_hotspot", results)
+    finish_obs(obs, trace_path, metrics_path)
     if failures:
         for f in failures:
             print(f"SMOKE FAIL: {f}", flush=True)
@@ -171,8 +232,10 @@ def smoke() -> None:
     print(f"SMOKE OK: repartition {thr_rep:.0f}ops/s >= arbiter "
           f"{thr_arb:.0f}ops/s "
           f"({thr_rep / max(thr_arb, 1e-9):.2f}x), "
-          f"splits={snap['n_splits']}, merges={snap['n_merges']}",
-          flush=True)
+          f"splits={snap['n_splits']}, merges={snap['n_merges']}, "
+          f"max_cutover_stall={max_stall_us:.1f}us "
+          f"(median op {med_us:.1f}us), "
+          f"{len(obs.tracer.events)} trace events", flush=True)
     if sanitize_enabled():
         # every policy's close() above would have raised otherwise
         print(f"SANITIZE OK: zero refcount leaks, exact stats conservation "
@@ -181,7 +244,9 @@ def smoke() -> None:
 
 
 def main(quick: bool = False):
-    run_walk(quick=quick)
+    obs, trace_path, metrics_path = make_obs("shifting_hotspot")
+    run_walk(quick=quick, obs=obs)
+    finish_obs(obs, trace_path, metrics_path)
 
 
 if __name__ == "__main__":

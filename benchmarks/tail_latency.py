@@ -3,6 +3,13 @@
 HotRAP serves most reads from FD => the p99/p999 tail (dominated by SD
 random reads in tiered baselines) collapses toward the FD latency.
 
+Latency attribution (PR 7): every run rides under the observability
+plane's sampled `AttributionSampler`, so after each system's p99 line
+the benchmark prints the *composition of the tail* — which serving tier
+the slow ops hit, how many device probes they made, whether the cached
+GroupView or block cache short-circuited them, and whether they were
+blocked behind a repartition cutover or a live migration stream.
+
 Sharded section (`fig8_shard`, ROADMAP item): the same hotspot made
 *contiguous* (unscrambled) on a range-partitioned 4-shard cluster, so
 all the heat funnels through one shard and the tail inflates with that
@@ -11,20 +18,28 @@ core/runner.py).  Three policies are compared — static partition map,
 ``HotBudget`` budget-only arbitration, and dynamic repartitioning
 (``Repartitioner``) — the p99/p999 table lands in
 docs/ARCHITECTURE.md.
+
+``--smoke`` gates that the attribution plane actually attributes (a
+non-empty tail table for every system) and writes
+``BENCH_tail_latency.json``; ``--trace``/``--metrics-out`` export the
+flight-recorder artifacts like every other benchmark.
 """
 from __future__ import annotations
+
+import sys
 
 from repro.core import make_sharded_system
 from repro.core.runner import db_key_count, load_db, run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import (DB_CACHE, SHARD_POLICIES, emit, make_cfg, n_ops,
-                     skew_shard_config)
+from .common import (DB_CACHE, SHARD_POLICIES, emit, finish_obs, make_cfg,
+                     make_obs, n_ops, skew_shard_config, write_bench_json)
 
 SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap", "sas_cache"]
 
 
-def sharded_tail(quick: bool = False, tag: str = "fig8_shard") -> dict:
+def sharded_tail(quick: bool = False, tag: str = "fig8_shard",
+                 obs=None) -> dict:
     """Skew-induced tail inflation vs the arbiter and vs repartitioning
     on a range-partitioned cluster under contiguous hotspot skew."""
     profile = "quick" if quick else None
@@ -37,6 +52,9 @@ def sharded_tail(quick: bool = False, tag: str = "fig8_shard") -> dict:
         db = make_sharded_system("hotrap", cfg, shard_cfg=scfg)
         load_db(db, nk, 1000, 0)
         db.reset_storage()
+        if obs is not None:
+            obs.attr.reset()
+            obs.attach(db, name=f"shard_{name}")
         dist = KeyDist("hotspot", nk, scramble=False)
         wl = ycsb("RO", dist, ops, 1000, seed=11)
         res = run_workload(db, wl, name=name)
@@ -46,21 +64,64 @@ def sharded_tail(quick: bool = False, tag: str = "fig8_shard") -> dict:
              f"fd_hit={res.fd_hit_rate:.3f};"
              f"repartitions={res.n_repartitions};"
              f"migrated_mb={res.migration_bytes / 2 ** 20:.1f}")
+        if obs is not None:
+            print(obs.attr.format_table(0.99, title=f"{tag}/{name}"),
+                  flush=True)
     return out
 
 
-def main(quick: bool = False):
-    cfg = make_cfg()
+def main(quick: bool = False) -> dict:
+    # force=True: attribution must be live even without --trace —
+    # the p99 table below is this benchmark's headline output.
+    obs, trace_path, metrics_path = make_obs("tail_latency", force=True)
+    profile = "quick" if quick else None
+    cfg = make_cfg(profile)
+    results: dict = {}
     for mix in (["RO"] if quick else ["RO", "RW"]):
         for system in SYSTEMS:
             db, nk = DB_CACHE.get(system, cfg, 1000)
+            obs.attr.reset()
+            obs.attach(db, name=f"{mix}_{system}")
             dist = KeyDist("hotspot", nk)
-            wl = ycsb(mix, dist, n_ops(), 1000, seed=11)
+            wl = ycsb(mix, dist, n_ops(profile), 1000, seed=11)
             res = run_workload(db, wl, name=system)
+            results[f"{mix}/{system}"] = res
             emit(f"fig8/{mix}/{system}/p99", res.p99 * 1e6,
                  f"p999={res.p999 * 1e6:.1f}us")
-    sharded_tail(quick=quick)
+            print(obs.attr.format_table(0.99, title=f"{mix}/{system}"),
+                  flush=True)
+    for name, res in sharded_tail(quick=quick, obs=obs).items():
+        results[f"shard/{name}"] = res
+    finish_obs(obs, trace_path, metrics_path)
+    return results
+
+
+def smoke() -> None:
+    """CI tripwire: the attribution plane must attribute every system's
+    tail, and the JSON artifact must land."""
+    results = main(quick=True)
+    failures = []
+    for label, res in results.items():
+        if res.p999 < res.p99:
+            failures.append(f"{label}: p999 {res.p999} < p99 {res.p99}")
+        att = res.attribution
+        if att is None or not att["rows"]:
+            failures.append(f"{label}: empty attribution table")
+    hot = results["RO/hotrap"]
+    if hot.p99 <= 0:
+        failures.append(f"RO/hotrap p99 {hot.p99} not positive")
+    write_bench_json("tail_latency", results)
+    if failures:
+        for f in failures:
+            print(f"SMOKE FAIL: {f}", flush=True)
+        raise SystemExit(1)
+    print(f"SMOKE OK: attribution non-empty for {len(results)} runs, "
+          f"RO/hotrap p99={hot.p99 * 1e6:.1f}us "
+          f"p999={hot.p999 * 1e6:.1f}us", flush=True)
 
 
 if __name__ == "__main__":
-    main()
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main(quick="--quick" in sys.argv)

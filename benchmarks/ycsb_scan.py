@@ -34,7 +34,7 @@ import numpy as np
 from repro.core.runner import run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import DB_CACHE, emit, make_cfg, n_ops
+from .common import DB_CACHE, emit, make_cfg, n_ops, write_bench_json
 
 ALL_SYSTEMS = ["rocksdb_fd", "rocksdb_tiered", "hotrap", "mutant",
                "sas_cache", "prismdb"]
@@ -123,6 +123,8 @@ def smoke() -> None:
     """CI tripwire (see .github/workflows/ci.yml bench-smoke)."""
     results = run(1000, quick=True)
     ratio = run_remix_ablation(1000)
+    write_bench_json("ycsb_scan",
+                     dict(results, remix_merge_ops_ratio=ratio))
     hot = results["hotrap"].scan_fd_hit_rate
     baselines = {s: r.scan_fd_hit_rate for s, r in results.items()
                  if s not in ("hotrap", "rocksdb_fd")}

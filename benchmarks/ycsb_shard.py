@@ -31,7 +31,7 @@ from repro.core.baselines import make_sharded_system
 from repro.core.runner import db_key_count, load_db, run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import emit, make_cfg, n_ops
+from .common import emit, make_cfg, n_ops, write_bench_json
 
 SHARD_COUNTS = (1, 2, 4)
 HIT_TOLERANCE = 0.10       # N=4 FD hit rate may trail N=1 by at most this
@@ -117,7 +117,12 @@ def smoke() -> None:
     if hit4 < hit1 - HIT_TOLERANCE:
         failures.append(f"N=4 FD hit rate {hit4:.3f} < N=1 {hit1:.3f} "
                         f"- tolerance {HIT_TOLERANCE}")
-    _, shares, shift = skew
+    res_skew, shares, shift = skew
+    write_bench_json("ycsb_shard", {
+        **{f"scaling/n{n}": r for n, r in scaling.items()},
+        "skew": res_skew,
+        "skew_shares": [float(x) for x in shares],
+        "skew_budget_shift": float(shift)})
     if shift < MIN_BUDGET_SHIFT:
         failures.append(f"HotBudget shifted only {shift:.3f} of FD budget "
                         f"toward the hot shard (< {MIN_BUDGET_SHIFT}); "

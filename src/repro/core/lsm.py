@@ -55,6 +55,7 @@ import dataclasses
 
 import numpy as np
 
+from ..obs import NULL_OBS
 from .promotion import ImmutablePromotionCache, MutablePromotionCache
 from .ralt import RALT, RaltConfig
 from .scan import MAX_KEY, MergeCounters, build_sources, merge_scan
@@ -186,6 +187,13 @@ class TieredLSM:
     """The key-value store.  `put`/`get`/`delete`/`scan`/`scan_range`
     are the public API."""
 
+    # observability plane (src/repro/obs): the class-level null plane is
+    # compiled out — every instrumentation site below guards on the
+    # single attribute check `self._obs.enabled`.  `Observability.attach`
+    # overrides both per instance; pickling drops them (see __getstate__).
+    _obs = NULL_OBS
+    _obs_track = "db"
+
     def __init__(self, cfg: LSMConfig, storage: StorageSim | None = None,
                  seed: int = 0):
         self.cfg = cfg
@@ -304,6 +312,9 @@ class TieredLSM:
         whole probe sequence sees one consistent snapshot."""
         self.stats.gets += 1
         self._tick()
+        obs = self._obs
+        if obs.enabled and obs.attribution:
+            obs.attr.begin_get(self)
         v = self.version
         # 1. memtables
         for table in [self.memtable, *self.imm_memtables]:
@@ -328,9 +339,18 @@ class TieredLSM:
             self.stats.served_sd += 1
             seq, vlen, _ = hit
             if self.cfg.hotrap and vlen != TOMBSTONE_VLEN:
+                if obs.enabled and self.ralt is not None:
+                    obs.tracer.instant(
+                        self._obs_track, "promo/get",
+                        {"key": int(key),
+                         "ralt_hot": bool(self.ralt.is_hot(key)),
+                         "score_bytes":
+                             float(self.ralt.range_hot_bytes(key, key))})
                 self._insert_pc(key, seq, vlen, touched)
             return self._finish_get(key, (seq, vlen), tier="SD")
         self.stats.misses += 1
+        if obs.enabled and obs.attribution:
+            obs.attr.end_get(self, "miss")
         return None
 
     def scan(self, lo: int, n: int) -> list[tuple[int, int, int]]:
@@ -362,6 +382,9 @@ class TieredLSM:
         self._tick()
         if limit is not None and limit <= 0:
             return []
+        obs = self._obs
+        if obs.enabled and obs.attribution:
+            obs.attr.begin_get(self)
         v = self.version               # pinned snapshot for the whole scan
         counters = MergeCounters()
         smap = build_sources(self, v, lo, hi, self._scan_charge_block)
@@ -389,6 +412,8 @@ class TieredLSM:
         st.scanned_records += len(out)
         st.scan_cursor_pulls += counters.pulls
         st.scan_merge_compares += counters.compares
+        if obs.enabled and obs.attribution:
+            obs.attr.end_get(self, "scan")
         if self.cfg.hotrap and self.ralt is not None and out:
             # clamp an open-ended scan(lo, n) to the range actually served
             hi_eff = out[-1][0] if limit is not None else hi
@@ -433,6 +458,12 @@ class TieredLSM:
                                               self.cfg.n_fd_levels)
             self.stats.range_promotions += 1
             self.stats.range_promoted_records += len(sd_hits)
+            if self._obs.enabled:
+                self._obs.tracer.instant(
+                    self._obs_track, "promo/scan",
+                    {"records": len(sd_hits), "range_promotion": True,
+                     "score_bytes": float(self.ralt.range_hot_bytes(lo, hi)),
+                     "scanned": len(out)})
             for (key, seq, vlen, _), t in zip(sd_hits, touched):
                 self.stats.scan_pc_inserts += 1
                 self._insert_pc(key, seq, vlen, t)
@@ -447,6 +478,12 @@ class TieredLSM:
             return
         touched = version.sd_touched_many(skeys[sel], wsids[sel],
                                           self.cfg.n_fd_levels)
+        if self._obs.enabled:
+            self._obs.tracer.instant(
+                self._obs_track, "promo/scan",
+                {"records": int(len(sel)), "range_promotion": False,
+                 "score_bytes": float(self.ralt.range_hot_bytes(lo, hi)),
+                 "scanned": len(out)})
         for j, t in zip(sel, touched):
             key, seq, vlen, _ = sd_hits[j]
             self.stats.scan_pc_inserts += 1
@@ -537,9 +574,14 @@ class TieredLSM:
 
     def _finish_get(self, key: int, hit: tuple[int, int], tier):
         seq, vlen = hit
+        obs = self._obs
         if vlen == TOMBSTONE_VLEN:
             self.stats.misses += 1
+            if obs.enabled and obs.attribution:
+                obs.attr.end_get(self, "miss")
             return None
+        if obs.enabled and obs.attribution:
+            obs.attr.end_get(self, tier or "mem")
         if self.ralt is not None:
             self.ralt.record_access(key, vlen)
         return seq, vlen
@@ -628,6 +670,10 @@ class TieredLSM:
                 self.mpc = MutablePromotionCache()
             return
         records = sorted((k, sv[0], sv[1]) for k, sv in self.mpc.data.items())
+        if self._obs.enabled:
+            self._obs.tracer.instant(self._obs_track, "mpc_freeze",
+                                     {"records": len(records),
+                                      "bytes": int(self.mpc.bytes)})
         # pin the superversion (paper step 4, under DB mutex): the
         # current Version plus the immutable memtables, by reference —
         # installs after this point publish new Versions and cannot
@@ -643,6 +689,14 @@ class TieredLSM:
     def _run_checker(self, immpc: ImmutablePromotionCache) -> None:
         """Background Checker (Fig. 5 steps 5-11), against the frozen
         Superversion pinned at freeze time."""
+        obs = self._obs
+        if not obs.enabled:
+            return self._checker_body(immpc)
+        with obs.tracer.span(self._obs_track, "checker",
+                             {"records": len(immpc.records)}):
+            return self._checker_body(immpc)
+
+    def _checker_body(self, immpc: ImmutablePromotionCache) -> None:
         self.stats.checker_runs += 1
         if immpc not in self.immpcs:
             immpc.sv.release()              # no-op if already released
@@ -683,6 +737,10 @@ class TieredLSM:
         self.storage.seq_write("FD", sst.size_bytes, fg=False,
                                component="promotion")
         self.stats.promoted_bytes += sst.size_bytes
+        if self._obs.enabled:
+            self._obs.tracer.instant(self._obs_track, "promo/flush",
+                                     {"records": len(hot),
+                                      "bytes": int(sst.size_bytes)})
         self._publish(self._levels_with(0, [sst] + self.version.levels[0]))
         self._maybe_compact()
 
@@ -734,6 +792,10 @@ class TieredLSM:
             vlens = np.array([sv[1] for _, sv in items], dtype=np.uint32)
             sst = SSTable(keys, seqs, vlens, "FD", 0, self.now,
                           self.cfg.bits_per_key)
+            obs = self._obs
+            if obs.enabled:
+                obs.tracer.begin(self._obs_track, "flush",
+                                 {"records": int(sst.n)})
             self.storage.seq_write("FD", sst.size_bytes, fg=False,
                                    component="flush")
             # each flush publishes a new Version with the run at the L0
@@ -741,6 +803,10 @@ class TieredLSM:
             self._publish(self._levels_with(0,
                                             [sst] + self.version.levels[0]))
             self.stats.flushes += 1
+            if obs.enabled:
+                obs.tracer.end(self._obs_track, "flush",
+                               {"bytes": int(sst.size_bytes),
+                                "vid": self.version.vid})
 
     # ------------------------------------------------------------------
     # compaction
@@ -810,6 +876,12 @@ class TieredLSM:
     def _merge_into_next(self, li: int, inputs: list[SSTable],
                          lo: int, hi: int) -> None:
         lj = li + 1
+        obs = self._obs
+        if obs.enabled:
+            obs.tracer.begin(self._obs_track, "compaction",
+                             {"from": li, "to": lj})
+        ret0 = self.stats.retained_bytes
+        pro0 = self.stats.promoted_bytes
         nexts = [t for t in self.levels[lj] if t.overlaps(lo, hi)]
         all_inputs = inputs + nexts
         for s in all_inputs:
@@ -858,6 +930,17 @@ class TieredLSM:
             s.finish_compaction()
             self._sid_compacted[s.sid] = True
             self.block_cache.invalidate_sstable(s.sid)
+        if obs.enabled:
+            dret = self.stats.retained_bytes - ret0
+            dpro = self.stats.promoted_bytes - pro0
+            if dret or dpro:
+                obs.tracer.instant(self._obs_track, "promo/retained",
+                                   {"retained_bytes": dret,
+                                    "promoted_bytes": dpro})
+            obs.tracer.end(self._obs_track, "compaction",
+                           {"in_bytes": int(in_bytes),
+                            "cross_tier": cross_tier,
+                            "vid": self.version.vid})
 
     def _merge_cross_tier(self, fd_inputs: list[SSTable],
                           sd_inputs: list[SSTable], lo: int, hi: int,
@@ -1002,6 +1085,10 @@ class TieredLSM:
         benchmarks pickle loaded DBs via DB_CACHE)."""
         state = self.__dict__.copy()
         state["_view_cache"] = ViewCache()
+        # the observability plane is session-scoped (holds a clock over
+        # live storages): pickles revert to the class-level null plane
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
         return state
 
     # ------------------------------------------------------------------

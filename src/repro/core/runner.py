@@ -13,9 +13,14 @@ import numpy as np
 
 from ..data.workloads import (OP_INSERT, OP_READ, OP_SCAN, OP_UPDATE,
                               Workload, load_keys)
+from ..obs import NULL_OBS, TierLatencyHistogram, jsonify
 from .baselines import make_system
 from .lsm import LSMConfig, TieredLSM
 from .storage import MIB
+
+# Version tag for every BENCH_*.json the benchmarks write; bump when a
+# field changes meaning, add freely without bumping.
+BENCH_SCHEMA = "hotrap-bench/1"
 
 
 @dataclasses.dataclass
@@ -26,7 +31,10 @@ class RunResult:
     tail_window_seconds: float  # final 10% of ops
     throughput: float           # ops/s over final 10% (paper metric)
     fd_hit_rate: float
-    get_latencies: np.ndarray   # per-get/per-scan simulated seconds
+    latency: TierLatencyHistogram | None  # joint (fd, sd) device-time
+                                          # histogram of final-10%
+                                          # gets/scans (bounded memory;
+                                          # None when latency off)
     stats: dict
     storage: dict
     scan_fd_hit_rate: float = 0.0   # scanned records served off FD, final 10%
@@ -47,16 +55,67 @@ class RunResult:
                                      # end: cumulative counters since
                                      # reset_storage, events, bounds,
                                      # knobs (None when off)
+    # --- observability plane (PR 7) ---
+    infl_fd: float = 1.0            # 1/(1-rho_FD): queueing inflation
+    infl_sd: float = 1.0            # 1/(1-rho_SD): applied at quantile
+                                    # time, so the histogram can store
+                                    # raw device deltas during the run
+    attribution: dict | None = None  # AttributionSampler.summary()
+                                     # (None when no obs attached)
+
+    # Quantiles of infl_fd*fd + infl_sd*sd over the joint histogram —
+    # each term is exact to one log-bin width (ratio ~1.075), so these
+    # match the former exact-array percentiles within one bin.
+    @property
+    def p50(self) -> float:
+        return self.latency.percentile(0.50, self.infl_fd, self.infl_sd) \
+            if self.latency is not None else 0.0
 
     @property
     def p99(self) -> float:
-        return float(np.percentile(self.get_latencies, 99)) \
-            if len(self.get_latencies) else 0.0
+        return self.latency.percentile(0.99, self.infl_fd, self.infl_sd) \
+            if self.latency is not None else 0.0
 
     @property
     def p999(self) -> float:
-        return float(np.percentile(self.get_latencies, 99.9)) \
-            if len(self.get_latencies) else 0.0
+        return self.latency.percentile(0.999, self.infl_fd, self.infl_sd) \
+            if self.latency is not None else 0.0
+
+    @property
+    def mean_latency(self) -> float:
+        h = self.latency
+        if h is None or h.count == 0:
+            return 0.0
+        return (h.sum_fd * self.infl_fd + h.sum_sd * self.infl_sd) / h.count
+
+    def to_json(self) -> dict:
+        """Schema-versioned JSON-safe digest (benchmarks' BENCH_*.json)."""
+        return jsonify({
+            "schema": BENCH_SCHEMA,
+            "system": self.system,
+            "n_ops": self.n_ops,
+            "sim_seconds": self.sim_seconds,
+            "tail_window_seconds": self.tail_window_seconds,
+            "throughput": self.throughput,
+            "fd_hit_rate": self.fd_hit_rate,
+            "scan_fd_hit_rate": self.scan_fd_hit_rate,
+            "scan_merge_ops_per_record": self.scan_merge_ops_per_record,
+            "range_promo_frac": self.range_promo_frac,
+            "n_shards": self.n_shards,
+            "shard_budget": self.shard_budget,
+            "n_repartitions": self.n_repartitions,
+            "migration_bytes": self.migration_bytes,
+            "repartition": self.repartition,
+            "latency": {
+                "p50": self.p50, "p99": self.p99, "p999": self.p999,
+                "mean": self.mean_latency,
+                "infl_fd": self.infl_fd, "infl_sd": self.infl_sd,
+                "hist": self.latency.to_json() if self.latency else None,
+            },
+            "attribution": self.attribution,
+            "stats": self.stats,
+            "storage": self.storage,
+        })
 
 
 def default_config(scale: str = "small") -> LSMConfig:
@@ -155,8 +214,15 @@ def run_workload(db, wl: Workload, name: str = "?",
     fresh_value = wl.value_len
     n = len(wl.ops)
     tiers = ("FD", "SD")
-    fd_lat = np.zeros(n if collect_latency else 0)
-    sd_lat = np.zeros(n if collect_latency else 0)
+    # Bounded-memory joint (fd, sd) histogram of final-10% get/scan
+    # device deltas; quantiles of the inflated sum are recovered at run
+    # end (replaces the former unbounded per-op latency arrays).
+    lat_hist = TierLatencyHistogram() if collect_latency else None
+    # Observability plane, if one was attached (Observability.attach
+    # sets db._obs; the class default NULL_OBS is compiled out).
+    obs = getattr(getattr(db, "_db", db), "_obs", NULL_OBS)
+    track_attr = obs.enabled and obs.attribution and collect_latency
+    obs_on = obs.enabled
     t10_start_ops = int(n * 0.9)
     busy90: dict = {}
     gets90 = hits90 = scanned90 = scan_hits90 = 0
@@ -189,6 +255,7 @@ def run_workload(db, wl: Workload, name: str = "?",
                     else _live_storages(db)
                 f0 = [(st, st.dev["FD"].fg_time, st.dev["SD"].fg_time)
                       for st in base]
+                ev0 = len(rep.events) if rep is not None else 0
             if op == OP_READ:
                 db.get(key)
             else:
@@ -207,14 +274,25 @@ def run_workload(db, wl: Workload, name: str = "?",
                     cand = f0 + [(st, 0.0, 0.0)
                                  for st in _live_storages(db)
                                  if id(st) not in known]
-                fd_lat[j] = max(st.dev["FD"].fg_time - b
-                                for st, b, _ in cand)
-                sd_lat[j] = max(st.dev["SD"].fg_time - b
-                                for st, _, b in cand)
+                fd_d = max(st.dev["FD"].fg_time - b
+                           for st, b, _ in cand)
+                sd_d = max(st.dev["SD"].fg_time - b
+                           for st, _, b in cand)
+                if j >= t10_start_ops:
+                    lat_hist.add(fd_d, sd_d)
+                if track_attr:
+                    obs.attr.commit(
+                        fd_d + sd_d,
+                        cutover=(rep is not None
+                                 and len(rep.events) != ev0),
+                        migrating=(rep is not None
+                                   and rep._job is not None))
         elif op == OP_INSERT:
             db.put(key, fresh_value)
         else:
             db.put(key, fresh_value)
+        if obs_on:
+            obs.on_op(db)
     sts = _db_storages(db)
     total = max(st.sim_time for st in sts)
     # Throughput = ops in window / bottleneck-device work in the window
@@ -228,19 +306,14 @@ def run_workload(db, wl: Workload, name: str = "?",
     # 1/(1-rho)) — a saturated device queues, an idle one does not.
     # Sharded: the hottest shard's per-tier utilisation is the queueing
     # model (requests route to one shard; the loaded one queues).
+    infl = {"FD": 1.0, "SD": 1.0}
     if collect_latency:
-        lat = np.zeros(n - t10_start_ops)
         # lint: allow-loop (two fixed tiers, not per-op data)
-        for t, arr in (("FD", fd_lat), ("SD", sd_lat)):
+        for t in tiers:
             busy_t = max(st.dev[t].busy - busy90.get((id(st), t), 0.0)
                          for st in sts)
             rho = min(busy_t / window, 0.95)
-            lat += arr[t10_start_ops:] / (1.0 - rho)
-        window_reads = ((wl.ops[t10_start_ops:] == OP_READ)
-                        | (wl.ops[t10_start_ops:] == OP_SCAN))
-    else:
-        lat = fd_lat
-        window_reads = np.zeros(0, dtype=bool)
+            infl[t] = 1.0 / (1.0 - rho)
     # paper metric: FD hit rate over the *final 10%* of the run phase
     stats = db.stats
     gets_w = stats.gets - gets90
@@ -258,11 +331,14 @@ def run_workload(db, wl: Workload, name: str = "?",
     eff_cfg = getattr(db, "shard_cfg", None) or db.cfg
     # repartition events + migration cost (PR 5)
     rep_snap = rep.snapshot() if rep is not None else None
+    attr_snap = obs.attr.summary() if track_attr else None
     return RunResult(
         system=name, n_ops=n, sim_seconds=total,
         tail_window_seconds=window, throughput=thr,
         fd_hit_rate=hit_final,
-        get_latencies=lat[window_reads] if collect_latency else lat,
+        latency=lat_hist,
+        infl_fd=infl["FD"], infl_sd=infl["SD"],
+        attribution=attr_snap,
         stats=dataclasses.asdict(stats),
         storage=_merged_storage_snapshot(sts),
         scan_fd_hit_rate=scan_hit_final,

@@ -230,6 +230,29 @@ class Sanitizer:
             self.check_get(key, got)
 
     # -- cadence --------------------------------------------------------
+    def _run_suite(self, kind: str, oracle: bool = False) -> None:
+        """One invariant sweep, with its verdict mirrored onto the
+        observability plane (when one is attached) as an instant on the
+        sanitizer lane — pass or fail, so a trace shows exactly which
+        sweep tripped."""
+        obs = getattr(self.db, "_obs", None)
+        track = f"{getattr(self.db, '_obs_track', 'db')}/sanitizer"
+        try:
+            self.check_refs()
+            self.check_migration_accounting()
+            self.check_op_conservation()
+            if oracle:
+                self.sample_oracle()
+        except SanitizeError as e:
+            if obs is not None and obs.enabled:
+                obs.tracer.instant(track, "sanitize_fail",
+                                   {"kind": kind, "ops": self._ops,
+                                    "error": str(e)[:200]})
+            raise
+        if obs is not None and obs.enabled:
+            obs.tracer.instant(track, "sanitize_ok",
+                               {"kind": kind, "ops": self._ops})
+
     def after_op(self) -> None:
         self._ops += 1
         rep = getattr(self.db, "repartitioner", None)
@@ -238,14 +261,9 @@ class Sanitizer:
             # the books before anything else happens
             self._events_seen = len(rep.events)
             self.checks["cutovers_checked"] += 1
-            self.check_refs()
-            self.check_migration_accounting()
-            self.check_op_conservation()
+            self._run_suite("cutover")
         if self._ops % self.check_every == 0:
-            self.check_refs()
-            self.check_migration_accounting()
-            self.check_op_conservation()
-            self.sample_oracle()
+            self._run_suite("periodic", oracle=True)
 
     def on_reset_storage(self) -> None:
         # reset_storage() zeroes Stats and device books and cancels any

@@ -126,6 +126,7 @@ import heapq
 
 import numpy as np
 
+from ..obs import NULL_OBS
 from .lsm import LSMConfig, Stats, TieredLSM
 from .scan import MAX_KEY
 from .sstable import KEY_BYTES, TOMBSTONE_VLEN, split_into_sstables
@@ -243,6 +244,11 @@ class HotBudget:
     shard set.
     """
 
+    # observability plane (see TieredLSM._obs); attach() points the
+    # track at "<name>/cluster" so arbiter events share the cluster lane
+    _obs = NULL_OBS
+    _obs_track = "cluster"
+
     def __init__(self, scfg: ShardConfig, shards: list[TieredLSM]):
         self.scfg = scfg
         self.shards = shards
@@ -274,11 +280,17 @@ class HotBudget:
         target /= target.sum()
         new = (1.0 - self.scfg.ema) * self.shares + self.scfg.ema * target
         new /= new.sum()
-        self.total_shift += 0.5 * float(np.abs(new - self.shares).sum())
+        shift = 0.5 * float(np.abs(new - self.shares).sum())
+        self.total_shift += shift
         self.shares = new
         self.n_rebalances += 1
         for i, shard in enumerate(self.shards):
             self._apply(i, shard)
+        if self._obs.enabled:
+            self._obs.tracer.instant(
+                self._obs_track, "hot_budget_rebalance",
+                {"shares": [round(float(s), 4) for s in self.shares],
+                 "shift": round(shift, 4)})
         return self.shares
 
     def _apply(self, i: int, shard: TieredLSM) -> None:
@@ -343,6 +355,8 @@ class HotBudget:
         survive the round-trip)."""
         state = self.__dict__.copy()
         state["_probe_state"] = {}
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
         return state
 
     def snapshot(self) -> dict:
@@ -381,6 +395,10 @@ class Repartitioner:
     See the module docstring for the full protocol and invariants.
     """
 
+    # observability plane (see TieredLSM._obs)
+    _obs = NULL_OBS
+    _obs_track = "cluster"
+
     def __init__(self, scfg: ShardConfig, router: "ShardedTieredLSM"):
         self.scfg = scfg
         self.router = router
@@ -397,6 +415,11 @@ class Repartitioner:
         self.migrated_read_bytes = 0
         self.migrated_write_bytes = 0
         self.events: list[dict] = []
+        # per-cutover router-visible pause, seconds (see _cutover):
+        # foreground busy delta on devices serving live shards, and the
+        # total (fg+bg) serialized-work delta on the same devices
+        self.cutover_stalls: list[float] = []
+        self.cutover_busy: list[float] = []
 
     # ------------------------------------------------------------------
     # driving
@@ -427,6 +450,8 @@ class Repartitioner:
             for v in self._job.pins:
                 v.unref()
             self._job = None
+            if self._obs.enabled:
+                self._obs.tracer.end(self._obs_track, "migration")
         self.total_ops = 0
         self.n_checks = 0
         self.incompatible_checks = 0
@@ -436,6 +461,8 @@ class Repartitioner:
         self.migrated_read_bytes = 0
         self.migrated_write_bytes = 0
         self.events = []
+        self.cutover_stalls = []
+        self.cutover_busy = []
         self._ops_since_check = 0
         self._cooldown = 0
         self._probe_state = {}            # storages were reset too
@@ -445,6 +472,8 @@ class Repartitioner:
         survive the round-trip)."""
         state = self.__dict__.copy()
         state["_probe_state"] = {}
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
         return state
 
     # ------------------------------------------------------------------
@@ -577,6 +606,10 @@ class Repartitioner:
                     plan += n_rec
         self._job = _MigrationJob(ops=ops, pins=pins, segments=segments,
                                   plan_records=plan)
+        if self._obs.enabled:
+            self._obs.tracer.begin(
+                self._obs_track, "migration",
+                {"ops": [op[0] for op in ops], "plan_records": plan})
         if plan == 0:                     # empty sources: cut over now
             self._cutover()
 
@@ -747,10 +780,31 @@ class Repartitioner:
     def _cutover(self) -> None:
         """Atomic topology install: between two router ops, replace the
         source shards and boundary entries with the freshly built
-        destinations and re-map the HotBudget shares."""
+        destinations and re-map the HotBudget shares.
+
+        Router-visible pause accounting: the devices serving *live*
+        shards at cutover start are snapshotted, and the stall is their
+        busy delta across the surgery.  `cutover_stalls` keeps the
+        foreground delta — time an op arriving during the cutover would
+        actually wait on, which the contract says must be zero (surgery
+        charges everything as background work; the smoke bench gates it
+        at 10× median op latency).  `cutover_busy` keeps the total
+        (fg+bg) delta — the serialized work the surgery put on serving
+        devices (snapshot-delta reads, RALT hot-set scans).  Fresh
+        destination devices are excluded: they start idle and only
+        begin serving after the install, so their install writes
+        overlap future serving rather than pausing the router."""
         job = self._job
         self._job = None
         r = self.router
+        obs = self._obs
+        base = [(st.dev[t], st.dev[t].fg_time,
+                 st.dev[t].fg_time + st.dev[t].bg_time)
+                for st in dict.fromkeys(sh.storage for sh in r.shards)
+                for t in ("FD", "SD")]
+        if obs.enabled:
+            obs.tracer.begin(self._obs_track, "cutover_stall",
+                             {"ops": [op[0] for op in job.ops]})
         try:
             self._charge_migration_delta(job)
             self._cutover_surgery(job, r)
@@ -761,6 +815,18 @@ class Repartitioner:
             # tests hold this to zero)
             for v in job.pins:
                 v.unref()
+        stall_fg = max((d.fg_time - f0 for d, f0, _ in base), default=0.0)
+        stall_busy = max((d.fg_time + d.bg_time - b0
+                          for d, _, b0 in base), default=0.0)
+        self.cutover_stalls.append(stall_fg)
+        self.cutover_busy.append(stall_busy)
+        if obs.enabled:
+            obs.tracer.end(self._obs_track, "cutover_stall",
+                           {"fg_us": round(stall_fg * 1e6, 3),
+                            "busy_us": round(stall_busy * 1e6, 3),
+                            "n_shards": len(r.shards)})
+            obs.tracer.end(self._obs_track, "migration",
+                           {"migrated_records": self.migrated_records})
         self._probe_state = _prune_probe_state(self._probe_state, r.shards)
         self._cooldown = self.scfg.repartition_cooldown_ops
         self._ops_since_check = 0
@@ -807,6 +873,10 @@ class Repartitioner:
                 self.n_splits += 1
                 detail.append({"kind": "split", "at": idx, "key": int(p),
                                "records": n_a + n_b})
+                if self._obs.enabled:
+                    self._obs.tracer.instant(
+                        self._obs_track, "repartition/split",
+                        {"at": idx, "key": int(p), "records": n_a + n_b})
             else:
                 a, b = op[1], op[2]
                 assert r.shards[idx + 1] is b, "merge pair not adjacent"
@@ -828,6 +898,10 @@ class Repartitioner:
                 self.n_merges += 1
                 detail.append({"kind": "merge", "at": idx,
                                "records": n_c})
+                if self._obs.enabled:
+                    self._obs.tracer.instant(
+                        self._obs_track, "repartition/merge",
+                        {"at": idx, "records": n_c})
         r._bounds = np.array(r._bounds_list, dtype=np.uint64)
         if r.hot_budget is not None:
             r.hot_budget.retopology(np.array(shares), np.array(scales))
@@ -836,6 +910,9 @@ class Repartitioner:
             # create at __init__; growing past one shard brings the
             # configured arbitration online (fair initial shares)
             r.hot_budget = HotBudget(r.scfg, r.shards)
+            if self._obs.enabled:
+                r.hot_budget._obs = self._obs
+                r.hot_budget._obs_track = self._obs_track
         self.events.append({
             "ops": detail, "at_op": self.total_ops,
             "n_shards": len(r.shards),
@@ -854,6 +931,12 @@ class Repartitioner:
             "migrated_write_bytes": self.migrated_write_bytes,
             "migrated_bytes": (self.migrated_read_bytes
                                + self.migrated_write_bytes),
+            "cutover_stalls_fg_us": [round(s * 1e6, 3)
+                                     for s in self.cutover_stalls],
+            "max_cutover_stall_fg_us": round(
+                max(self.cutover_stalls, default=0.0) * 1e6, 3),
+            "max_cutover_busy_us": round(
+                max(self.cutover_busy, default=0.0) * 1e6, 3),
             "active": self._job is not None,
             "n_shards": len(self.router.shards),
             "bounds": [int(b) for b in self.router._bounds_list],
@@ -879,6 +962,10 @@ class ShardedTieredLSM:
     are mutated only by the ``Repartitioner``'s cutover, between router
     ops.
     """
+
+    # observability plane (see TieredLSM._obs)
+    _obs = NULL_OBS
+    _obs_track = "cluster"
 
     def __init__(self, scfg: ShardConfig, cfg: LSMConfig,
                  factory=None, seed: int = 0, system: str | None = None):
@@ -938,9 +1025,14 @@ class ShardedTieredLSM:
 
     def __getstate__(self):
         """Pickle without the (possibly lambda) factory; unpickled
-        clusters rebuild shards via the stored system name."""
+        clusters rebuild shards via the stored system name.  The
+        observability plane (and its ``_new_shard`` hook closure) is
+        session-scoped and reverts to the class-level null plane."""
         state = self.__dict__.copy()
         state["_factory"] = None
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
+        state.pop("_new_shard", None)
         return state
 
     @property
@@ -1034,6 +1126,11 @@ class ShardedTieredLSM:
         if len(ks) == 0:
             return []
         sids = self._shard_ids(ks)
+        obs = self._obs
+        if obs.enabled:
+            obs.tracer.begin(f"{self._obs_track}/router", "router_batch",
+                             {"keys": int(len(ks)),
+                              "shards": int(len(np.unique(sids)))})
         out: list = [None] * len(ks)
         for si in np.unique(sids):  # lint: allow-loop (per-shard drain)
             shard = self.shards[int(si)]
@@ -1041,6 +1138,8 @@ class ShardedTieredLSM:
             # ROADMAP's vectorized-batch TieredLSM get)
             for j in np.flatnonzero(sids == si):
                 out[int(j)] = shard.get(int(ks[j]))
+        if obs.enabled:
+            obs.tracer.end(f"{self._obs_track}/router", "router_batch")
         self._account_ops(len(ks))
         return out
 

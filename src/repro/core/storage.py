@@ -131,6 +131,15 @@ class StorageSim:
             t: dataclasses.asdict(d) for t, d in self.dev.items()
         } | {"components": {k: dict(v) for k, v in self.by_component.items()}}
 
+    def device_totals(self) -> dict:
+        """Read-only per-device busy/byte totals for the observability
+        plane (src/repro/obs) — sampling must never go through _charge."""
+        return {t: {"fg": d.fg_time, "bg": d.bg_time,
+                    "read_bytes": d.read_bytes,
+                    "write_bytes": d.write_bytes,
+                    "rand_reads": d.rand_reads}
+                for t, d in self.dev.items()}
+
 
 class BlockCache:
     """In-memory LRU block cache keyed by (sstable_id, block_idx).

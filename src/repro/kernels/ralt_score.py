@@ -14,6 +14,7 @@ lanes.  Outputs: new ticks, new scores, and the is-hot bitmap (score
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import math
 
@@ -22,6 +23,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 F32 = jnp.float32
+
+
+def _annotate(name: str):
+    """`jax.profiler` trace annotation when the runtime provides one, so
+    real-device profiles show the same span names as the flight
+    recorder's Perfetto export (benchmarks/kernel_bench.py); a no-op
+    context otherwise."""
+    ta = getattr(getattr(jax, "profiler", None), "TraceAnnotation", None)
+    if ta is None:
+        return contextlib.nullcontext()
+    return ta(name)
 
 
 def _ralt_kernel(ticks_ref, scores_ref, hits_ref, now_ref, thresh_ref,
@@ -63,7 +75,7 @@ def ralt_update(ticks, scores, hits, now, threshold, alpha, *,
     grid = (rows // block_rows,)
     kernel = functools.partial(_ralt_kernel,
                                log_alpha=math.log(alpha))
-    nt, ns, hot = pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -84,7 +96,10 @@ def ralt_update(ticks, scores, hits, now, threshold, alpha, *,
             jax.ShapeDtypeStruct((rows, lanes), jnp.int8),
         ],
         interpret=interpret,
-    )(t2, s2, h2,
-      jnp.asarray(now, jnp.int32).reshape(1, 1),
-      jnp.asarray(threshold, F32).reshape(1, 1))
+    )
+    with _annotate("ralt_update"):
+        nt, ns, hot = call(
+            t2, s2, h2,
+            jnp.asarray(now, jnp.int32).reshape(1, 1),
+            jnp.asarray(threshold, F32).reshape(1, 1))
     return (nt.reshape(-1)[:N], ns.reshape(-1)[:N], hot.reshape(-1)[:N])

@@ -32,7 +32,7 @@ def _src(path: str, code: str) -> Source:
 # ----------------------------------------------------------------------
 def test_self_test_is_green():
     checks, errors = self_test()
-    assert checks == 5
+    assert checks == 6
     assert errors == [], "\n".join(errors)
 
 
@@ -41,7 +41,7 @@ def test_fixtures_are_not_vacuous():
     # detects nothing cannot silently "succeed"
     fixture_dir = REPO / "tools" / "check" / "fixtures"
     fixtures = sorted(fixture_dir.glob("*_cases.py"))
-    assert len(fixtures) == 5
+    assert len(fixtures) == 6
     for f in fixtures:
         assert f.read_text().count("# EXPECT:") >= 2, f.name
 
@@ -160,6 +160,20 @@ def test_stats_device_writes_flagged_outside_storage():
     assert len(StatsDisciplinePass().run(_src("pkg/a.py", code))) == 1
     assert StatsDisciplinePass().run(
         _src("src/repro/core/storage.py", code)) == []
+
+
+def test_stats_obs_plane_is_read_only():
+    code = """\
+        def sample(db, storage):
+            busy = storage.device_totals()
+            db.stats.gets  # read
+            storage.rand_read("SD", 4096, fg=True, component="obs")
+        """
+    # inside src/repro/obs/: the charge call is flagged, the reads pass
+    out = StatsDisciplinePass().run(_src("src/repro/obs/metrics.py", code))
+    assert len(out) == 1 and "never charges" in out[0].message
+    # the same code outside the plane uses the public API legitimately
+    assert StatsDisciplinePass().run(_src("benchmarks/x.py", code)) == []
 
 
 def test_stats_engine_counters_owned_by_core():

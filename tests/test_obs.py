@@ -1,0 +1,351 @@
+"""Observability plane (PR 7, src/repro/obs): log-bin histogram
+quantile accuracy against exact per-sample percentiles, trace span
+nesting/schema across a forced split+merge, disabled-mode zero events
+and bounded overhead, metrics cadence + ring bounds, cutover-stall
+recording, latency attribution, and the schema-versioned
+RunResult.to_json() every benchmark's BENCH_*.json goes through.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (LSMConfig, ShardConfig, make_sharded_system,
+                        make_system)
+from repro.core.runner import (BENCH_SCHEMA, bench_system, db_key_count,
+                               load_db, run_workload)
+from repro.data.workloads import KeyDist, ycsb
+from repro.obs import (NULL_OBS, LatencyHistogram, Observability, Series,
+                       TierLatencyHistogram, Tracer, jsonify)
+from repro.obs.attribution import TIER_NAMES
+from repro.obs.metrics import BIN_RATIO, LOG_HI, LOG_LO
+
+KIB = 1024
+MIB = 1024 * 1024
+KEYSPACE = 800
+
+
+def cluster_cfg(**kw):
+    base = dict(fd_size=512 * KIB, sd_size=4 * MIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16,
+                hotrap=True)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def repart_scfg(**kw):
+    base = dict(n_shards=4, partitioning="range", key_space=KEYSPACE,
+                repartition=True, repartition_interval_ops=10 ** 9,
+                migration_records_per_op=64, memtable_floor=8 * KIB,
+                block_cache_floor=8 * KIB)
+    base.update(kw)
+    return ShardConfig(**base)
+
+
+def traced_split_merge_run(obs=None):
+    """A cluster driven through one forced split and one forced merge
+    with live traffic interleaved; returns (db, obs)."""
+    obs = obs or Observability()
+    db = make_sharded_system("hotrap", cluster_cfg(), shard_cfg=repart_scfg())
+    obs.attach(db, name="t")
+    rng = np.random.default_rng(3)
+    rep = db.repartitioner
+
+    def trade(n):
+        for _ in range(n):
+            k = int(rng.integers(0, KEYSPACE))
+            r = rng.random()
+            if r < 0.5:
+                db.put(k, 120)
+            elif r < 0.8:
+                db.get(k)
+            else:
+                db.scan(int(rng.integers(0, KEYSPACE)), 20)
+
+    trade(1500)
+    assert rep.force_split(0)
+    trade(400)
+    rep.drain()
+    trade(200)
+    assert rep.force_merge(len(db.shards) - 2)
+    rep.drain()
+    trade(200)
+    return db, obs
+
+
+# ----------------------------------------------------------------------
+# histograms: exact counts, quantiles within one bin width
+# ----------------------------------------------------------------------
+def test_histogram_percentiles_within_one_bin_of_exact():
+    rng = np.random.default_rng(0)
+    xs = np.exp(rng.normal(np.log(1e-4), 1.5, 20_000))  # latencies ~ lognormal
+    h = LatencyHistogram()
+    h.add_many(xs)
+    assert h.count == len(xs)
+    assert h.max == pytest.approx(float(xs.max()))
+    for q in (0.5, 0.9, 0.99, 0.999):
+        exact = float(np.quantile(xs, q))
+        got = h.percentile(q)
+        # bin representative = geometric midpoint => within one bin RATIO
+        assert exact / BIN_RATIO <= got <= exact * BIN_RATIO, \
+            f"q={q}: {got} vs exact {exact}"
+
+
+def test_histogram_scalar_adds_underflow_overflow_and_merge():
+    h = LatencyHistogram()
+    for x in (0.0, LOG_LO / 2, 1e-4, LOG_HI, LOG_HI * 10):
+        h.add(x)
+    assert h.count == 5
+    # exact zeros land in the underflow bin whose representative is 0.0
+    assert h.percentile(0.2) == 0.0
+    other = LatencyHistogram()
+    other.add(1e-4)
+    other.merge(h)
+    assert other.count == 6
+    assert other.to_json()["count"] == 6
+
+
+def test_tier_histogram_matches_exact_for_any_inflation():
+    rng = np.random.default_rng(1)
+    n = 10_000
+    fd = np.exp(rng.normal(np.log(2e-5), 1.0, n))
+    sd = np.exp(rng.normal(np.log(2e-4), 1.2, n))
+    sd[rng.random(n) < 0.7] = 0.0           # most ops never touch SD
+    h = TierLatencyHistogram()
+    # mix the scalar and vector paths (the runner uses the scalar one)
+    for i in range(500):
+        h.add(float(fd[i]), float(sd[i]))
+    h.add_many(fd[500:], sd[500:])
+    assert h.count == n
+    for a, b in ((1.0, 1.0), (1.8, 3.5), (1.0, 12.0)):
+        for q in (0.5, 0.99, 0.999):
+            exact = float(np.quantile(a * fd + b * sd, q))
+            got = h.percentile(q, a, b)
+            # two binned terms => within one bin ratio of the exact sum
+            assert exact / BIN_RATIO ** 2 <= got <= exact * BIN_RATIO ** 2, \
+                f"a={a} b={b} q={q}: {got} vs {exact}"
+
+
+def test_series_ring_buffer_wraps():
+    s = Series("x", capacity=8)
+    for i in range(20):
+        s.append(float(i), float(i * 10))
+    assert len(s) == 8
+    t, v = s.values()
+    assert list(t) == [float(i) for i in range(12, 20)]
+    assert s.last() == 190.0
+
+
+# ----------------------------------------------------------------------
+# tracer: span discipline + export schema on a real split+merge
+# ----------------------------------------------------------------------
+def test_trace_spans_nest_across_split_and_merge(tmp_path):
+    db, obs = traced_split_merge_run()
+    tr = obs.tracer
+    assert tr.validate() == []
+    names = tr.names()
+    for required in ("repartition/split", "repartition/merge", "migration",
+                     "cutover_stall", "flush", "compaction"):
+        assert required in names, f"missing {required}"
+    # every B has a matching E (validate checked order; check balance)
+    assert tr.count("migration", "B") == tr.count("migration", "E") == 2
+    assert tr.count("cutover_stall", "B") == tr.count("cutover_stall", "E")
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert doc["otherData"]["dropped_events"] == 0
+    assert any(e["ph"] == "M" and e["name"] == "process_name" for e in evs)
+    last_ts = 0.0
+    for e in evs:
+        assert isinstance(e["pid"], int) and isinstance(e["tid"], int)
+        if e["ph"] == "M":
+            continue
+        assert e["ts"] >= 0.0
+        assert e["ts"] >= last_ts or e["ph"] == "M"
+        last_ts = e["ts"]
+
+
+def test_trace_validate_catches_broken_stacks():
+    tr = Tracer(clock=lambda: 1.0)
+    tr.begin("a", "outer")
+    tr.begin("a", "inner")
+    tr.end("a")
+    assert tr.validate() == [f"unclosed span 'outer' on 'a'"]
+    tr.end("a")
+    assert tr.validate() == []
+    tr.end("a")                              # E with no open B
+    assert any("no open span" in p for p in tr.validate())
+
+
+def test_tracer_bounded_drops_not_grows():
+    tr = Tracer(clock=lambda: 0.0, max_events=10)
+    for i in range(25):
+        tr.instant("t", f"e{i}")
+    assert len(tr.events) == 10
+    assert tr.dropped == 15
+    assert tr.to_dict()["otherData"]["dropped_events"] == 15
+
+
+# ----------------------------------------------------------------------
+# disabled mode: zero events, single-attribute-check overhead
+# ----------------------------------------------------------------------
+def test_disabled_obs_records_nothing():
+    db = make_system("hotrap", cluster_cfg(), seed=0)
+    load_db(db, 300, 120, 0)
+    assert db._obs is NULL_OBS
+    wl = ycsb("RW", KeyDist("zipfian", 300), 1500, 120, seed=2)
+    res = run_workload(db, wl, name="x")
+    assert NULL_OBS.tracer.events == []
+    assert NULL_OBS.metrics.n_samples == 0
+    assert NULL_OBS.attr.n_seen == 0
+    assert res.attribution is None
+    assert res.latency.count > 0            # histograms are runner-owned
+
+
+def test_disabled_obs_overhead_under_3_percent():
+    """The compiled-out contract: an engine with a *disabled* plane
+    attached pays one attribute check per site over an unattached one.
+    Paired adjacent-in-time runs cancel machine-load drift; the median
+    of the per-pair ratios must stay inside the 3% budget."""
+    def one_run(attach_disabled: bool) -> float:
+        db = make_system("hotrap", cluster_cfg(), seed=0)
+        load_db(db, 400, 120, 0)
+        if attach_disabled:
+            Observability(enabled=False).attach(db, name="off")
+        wl = ycsb("RW", KeyDist("zipfian", 400), 3000, 120, seed=2)
+        t0 = time.perf_counter()
+        run_workload(db, wl, name="x", collect_latency=False)
+        return time.perf_counter() - t0
+
+    one_run(False)                           # warm caches/allocator
+    ratios = []
+    for i in range(5):
+        if i % 2 == 0:                       # alternate order in the pair
+            base, dis = one_run(False), one_run(True)
+        else:
+            dis, base = one_run(True), one_run(False)
+        ratios.append(dis / base)
+    assert float(np.median(ratios)) < 1.03, ratios
+
+
+# ----------------------------------------------------------------------
+# metrics registry: cadence + bounded series
+# ----------------------------------------------------------------------
+def test_metrics_sampled_on_cadence_and_bounded():
+    obs = Observability(metrics_interval_s=1e-5)
+    db = make_system("hotrap", cluster_cfg(), seed=0)
+    obs.attach(db, name="m")
+    load_db(db, 400, 120, 0)
+    wl = ycsb("RW", KeyDist("zipfian", 400), 3000, 120, seed=2)
+    run_workload(db, wl, name="x")
+    m = obs.metrics
+    assert m.n_samples > 2
+    t, v = m.series["fd_hit_rate"].values()
+    assert len(t) == len(v) > 0
+    assert all(0.0 <= x <= 1.0 for x in v)
+    assert np.all(np.diff(t) >= 0)
+    for s in m.series.values():             # ring capacity is the bound
+        assert len(s) <= 4096
+    doc = jsonify(m.to_json())
+    json.dumps(doc)
+    assert set(doc["series"]) == set(m.SERIES)
+
+
+# ----------------------------------------------------------------------
+# cutover stall: measured, surfaced, bounded
+# ----------------------------------------------------------------------
+def test_cutover_stall_recorded_and_small():
+    db, obs = traced_split_merge_run()
+    rep = db.repartitioner
+    assert len(rep.cutover_stalls) == 2     # one split + one merge
+    assert len(rep.cutover_busy) == 2
+    snap = rep.snapshot()
+    assert snap["max_cutover_stall_fg_us"] == pytest.approx(
+        max(rep.cutover_stalls) * 1e6)
+    assert len(snap["cutover_stalls_fg_us"]) == 2
+    # the atomic cutover charges surgery to *background* time: the
+    # router-visible foreground pause must be exactly zero here
+    assert snap["max_cutover_stall_fg_us"] == 0.0
+    # ...while the serialized background work is real and measured
+    assert snap["max_cutover_busy_us"] >= 0.0
+
+
+# ----------------------------------------------------------------------
+# attribution: engine half + runner half meet in RunResult
+# ----------------------------------------------------------------------
+def test_attribution_table_populated():
+    obs = Observability()
+    db = make_system("hotrap", cluster_cfg(), seed=0)
+    obs.attach(db, name="a")
+    load_db(db, 400, 120, 0)
+    wl = ycsb("RW", KeyDist("zipfian", 400), 3000, 120, seed=2)
+    res = run_workload(db, wl, name="x")
+    att = res.attribution
+    assert att is not None and att["n_sampled"] > 0
+    assert att["rows"], att
+    tiers = {r["tier"] for r in att["rows"]}
+    assert tiers <= set(TIER_NAMES)
+    assert sum(r["count"] for r in att["rows"]) == att["n_tail"]
+    text = obs.attr.format_table(0.99, title="t")
+    assert "attribution" in text and "tier" in text
+    json.dumps(jsonify(att))
+
+
+def test_attribution_reservoir_is_bounded():
+    obs = Observability(attr_capacity=64)
+    db = make_system("hotrap", cluster_cfg(), seed=0)
+    obs.attach(db, name="a")
+    load_db(db, 400, 120, 0)
+    wl = ycsb("RO", KeyDist("zipfian", 400), 2000, 120, seed=2)
+    run_workload(db, wl, name="x")
+    assert obs.attr.n_seen > 64
+    assert obs.attr.n_kept == 64
+
+
+# ----------------------------------------------------------------------
+# RunResult.to_json: the BENCH_*.json schema
+# ----------------------------------------------------------------------
+def test_runresult_to_json_schema_and_quantiles():
+    res = bench_system("hotrap", "RW", KeyDist("zipfian", 500), 3000, 120,
+                       cfg=cluster_cfg())
+    doc = res.to_json()
+    json.dumps(doc)                          # strictly JSON-safe
+    assert doc["schema"] == BENCH_SCHEMA
+    for key in ("system", "throughput", "fd_hit_rate", "latency",
+                "stats", "storage", "n_shards"):
+        assert key in doc, key
+    lat = doc["latency"]
+    assert lat["hist"]["count"] == res.latency.count > 0
+    assert lat["p50"] <= lat["p99"] <= lat["p999"]
+    assert res.p99 == pytest.approx(lat["p99"])
+    assert lat["infl_fd"] >= 1.0 and lat["infl_sd"] >= 1.0
+    # histograms survive the nonzero-cells round trip
+    total = sum(c for _, _, c in lat["hist"]["nonzero_cells"])
+    assert total == res.latency.count
+
+
+def test_promotion_pathway_instants_emitted():
+    """All three HotRAP promotion pathways leave typed instants."""
+    obs = Observability()
+    cfg = cluster_cfg(fd_size=256 * KIB)
+    db = make_system("hotrap", cfg, seed=0)
+    obs.attach(db, name="p")
+    nk = db_key_count(cfg, 120)
+    load_db(db, nk, 120, 0)
+    rng = np.random.default_rng(5)
+    hot = rng.choice(nk, size=max(nk // 20, 16), replace=False)
+    for _ in range(6):
+        for k in hot:
+            db.get(int(k))
+        for _ in range(4):
+            db.scan(int(nk // 3), 32)
+        for k in rng.integers(0, nk, 200):
+            db.put(int(k), 120)
+    db.flush_all()
+    names = obs.tracer.names()
+    for pathway in ("promo/get", "promo/scan", "promo/retained"):
+        assert pathway in names, f"missing {pathway} in {sorted(names)}"
+    assert obs.tracer.validate() == []

@@ -344,7 +344,7 @@ def test_runner_drives_scan_workload(system):
     assert res.stats["scanned_records"] > res.stats["scans"]
     assert res.throughput > 0
     assert 0.0 <= res.scan_fd_hit_rate <= 1.0
-    assert len(res.get_latencies) > 0
+    assert res.latency is not None and res.latency.count > 0
 
 
 def test_hotrap_scan_hit_rate_beats_tiered():

@@ -80,6 +80,8 @@ def _fixture_pairs() -> list[tuple[LintPass, str]]:
         (ImmutabilityPass(), "immutability_cases.py"),
         (PinReleasePass(), "pins_cases.py"),
         (StatsDisciplinePass(), "stats_cases.py"),
+        # fixture stands in for src/repro/obs/ (read-only rule)
+        (StatsDisciplinePass(obs_dirs=("obs_cases.py",)), "obs_cases.py"),
         # fixture registers its own hot functions in place of the real
         # runner/router/scan registry
         (VectorizationPass(hot={"vectorization_cases.py":

@@ -1,0 +1,42 @@
+"""Seeded violations for the `stats` pass's observability rule.
+
+Self-test data; parsed, never imported.  The self-test constructs the
+pass with ``obs_dirs=("obs_cases.py",)`` so this fixture stands in for
+`src/repro/obs/`: reads of device counters and engine stats are the
+plane's job and must stay clean, but *any* charge-API call or engine
+mutator is a violation — a sampler that charges simulated I/O perturbs
+the quantity it measures.
+"""
+
+
+def bad_sampler_charges_io(storage):
+    storage.rand_read("SD", 4096, fg=True, component="obs")  # EXPECT: stats
+    storage.seq_read("FD", 4096, fg=True, component="obs")  # EXPECT: stats
+    storage.seq_write("FD", 4096, fg=False, component="obs")  # EXPECT: stats
+    storage._charge("FD", 1.0, True, "obs")  # EXPECT: stats
+
+
+def bad_sampler_mutates_engine(db, key):
+    db.block_cache.access(key)  # EXPECT: stats
+    db.reset_storage()  # EXPECT: stats
+    db.block_cache.invalidate_sstable(3)  # EXPECT: stats
+
+
+def bad_sampler_writes_counters(db, storage):
+    storage.dev["FD"].fg_time = 0.0  # EXPECT: stats
+    db.stats.gets += 1  # EXPECT: stats
+
+
+def ok_read_only_sampling(db, storage, series):
+    busy = {t: d.fg_time + d.bg_time for t, d in storage.dev.items()}
+    totals = storage.device_totals()
+    hit = db.stats.gets and db.block_cache.hits / db.stats.gets
+    comp = storage.by_component.get("promotion", {})
+    series.append(busy, totals, hit, comp.get("read_bytes", 0))
+    return key_in_cache(db, 7)
+
+
+def key_in_cache(db, key):
+    # membership via __contains__ reads the cache without touching LRU
+    # order — the read-only alternative to access()
+    return (3, key) in db.block_cache

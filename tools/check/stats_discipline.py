@@ -12,6 +12,13 @@ Similarly, engine-level `Stats` counters are owned by the engine: code
 outside `src/repro/core/` may read `db.stats.*` freely but must not
 write through it (`ShardedTieredLSM` aggregates shard stats on the fly;
 a write from a benchmark would silently vanish on the next aggregation).
+
+The observability plane (`src/repro/obs/`, PR 7) gets a stricter rule:
+it may *read* device counters and engine stats freely (that is its
+job), but it must never call the charge APIs at all — a tracer that
+charges simulated I/O while sampling would perturb the quantity it
+measures — nor touch cache/storage mutators (`access`,
+`reset_storage`, `invalidate_sstable`).
 """
 from __future__ import annotations
 
@@ -24,21 +31,28 @@ DEVICE_FIELDS = {"fg_time", "bg_time", "read_bytes", "write_bytes",
 CHARGE_OWNER = ("core/storage.py",)
 STATS_OWNER_DIR = "repro/core/"
 MUTATING_METHODS = {"setdefault", "update", "clear", "pop", "popitem"}
+OBS_DIRS = ("repro/obs/",)
+OBS_FORBIDDEN_CALLS = {"rand_read", "seq_read", "seq_write", "_charge",
+                       "access", "reset_storage", "invalidate_sstable"}
 
 
 class StatsDisciplinePass(LintPass):
     name = "stats"
     description = ("device byte/latency counters may only be charged through "
-                   "StorageSim APIs; Stats fields are engine-owned")
+                   "StorageSim APIs; Stats fields are engine-owned; the "
+                   "observability plane reads but never charges")
 
     def __init__(self, charge_owner: tuple[str, ...] = CHARGE_OWNER,
-                 stats_owner_dir: str = STATS_OWNER_DIR):
+                 stats_owner_dir: str = STATS_OWNER_DIR,
+                 obs_dirs: tuple[str, ...] = OBS_DIRS):
         self.charge_owner = charge_owner
         self.stats_owner_dir = stats_owner_dir
+        self.obs_dirs = obs_dirs
 
     def run(self, src: Source) -> list[Finding]:
         in_charge_owner = src.matches(*self.charge_owner)
         in_core = self.stats_owner_dir in src.rel
+        in_obs = any(d in src.rel for d in self.obs_dirs)
         found: dict[tuple[int, str], Finding] = {}
 
         def report(node: ast.AST, key: str, msg: str) -> None:
@@ -83,6 +97,12 @@ class StatsDisciplinePass(LintPass):
                     report(node, "_charge",
                            "direct call to StorageSim._charge outside "
                            "core/storage.py — use the public charge APIs")
+                elif in_obs and node.func.attr in OBS_FORBIDDEN_CALLS:
+                    report(node, node.func.attr,
+                           f"call to '{node.func.attr}' from the "
+                           f"observability plane — src/repro/obs reads "
+                           f"counters but never charges simulated I/O or "
+                           f"mutates engine state")
                 elif node.func.attr in MUTATING_METHODS \
                         and isinstance(node.func.value, ast.Attribute) \
                         and node.func.value.attr == "by_component" \
