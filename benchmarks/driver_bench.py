@@ -1,0 +1,167 @@
+"""Driver microbenchmark (ISSUE 8): columnar batch execution vs the
+per-op scalar loop.
+
+Two comparisons, both on freshly-cloned loaded DBs driving identical
+workloads:
+
+  * `driver/<mix>` — the batched `run_workload` (chunked
+    struct-of-arrays, multi_get/put_many) against the pre-batching
+    per-op oracle loop, asserting byte-identical per-op results
+    (get hits, put seqs, scan records);
+  * `multi_get/batch` — the engine API itself: one `multi_get` batch
+    against the equivalent `get` loop, the pure multi_get-shaped upper
+    bound without chunking/driver overhead.
+
+`--smoke` gates batched >= 3x scalar ops/s on the read-heavy mix (the
+ISSUE 8 CI tripwire; target 5-10x) plus oracle equality on every mix,
+and writes BENCH_driver.json.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core.runner import run_workload
+from repro.data.workloads import OP_READ, OP_SCAN, KeyDist, ycsb
+
+from .common import (DB_CACHE, emit, make_cfg, n_ops, timer,
+                     write_bench_json)
+
+VALUE_LEN = 1000
+MIXES = ("RO", "RW", "SR")
+
+
+def scalar_drive(db, wl) -> list:
+    """The unbatched oracle: one engine call per op, in op order —
+    the pre-batching runner's exact execution order.  Returns per-op
+    results for byte-identical comparison against the batched driver."""
+    out = []
+    for j in range(len(wl.ops)):
+        op, key = int(wl.ops[j]), int(wl.keys[j])
+        if op == OP_READ:
+            out.append(db.get(key))
+        elif op == OP_SCAN:
+            out.append(db.scan(key, int(wl.scan_lens[j])))
+        else:
+            out.append(db.put(key, wl.value_len))
+    return out
+
+
+def bench_mix(mix: str, ops: int, reps: int = 2) -> dict:
+    """Each side drives `reps` fresh clones and reports its best wall
+    time (one GC pause or noisy neighbor on either side must not flip
+    the CI gate); results are compared on the first rep."""
+    cfg = make_cfg()
+    nk = DB_CACHE.get("hotrap", cfg, VALUE_LEN)[1]
+    dist = KeyDist("hotspot", nk)
+    wl = ycsb(mix, dist, ops, VALUE_LEN, seed=7)
+    oracle: list = []
+    s_wall = b_wall = float("inf")
+    for rep in range(reps):
+        db_s, _ = DB_CACHE.get("hotrap", cfg, VALUE_LEN)
+        with timer() as t_s:
+            out = scalar_drive(db_s, wl)
+        if rep == 0:
+            oracle = out
+        s_wall = min(s_wall, t_s.wall)
+    batched: list = []
+    for rep in range(reps):
+        db_b, _ = DB_CACHE.get("hotrap", cfg, VALUE_LEN)
+        out = []
+        with timer() as t_b:
+            run_workload(db_b, wl, name=f"driver_{mix}",
+                         collect_latency=False, results_out=out)
+        if rep == 0:
+            batched = out
+        b_wall = min(b_wall, t_b.wall)
+    scalar_ops = ops / max(s_wall, 1e-9)
+    batched_ops = ops / max(b_wall, 1e-9)
+    row = {
+        "mix": mix, "n_ops": ops,
+        "scalar_ops_per_s": scalar_ops,
+        "batched_ops_per_s": batched_ops,
+        "speedup": batched_ops / max(scalar_ops, 1e-9),
+        "identical": oracle == batched,
+    }
+    emit(f"driver/{mix}", b_wall / ops * 1e6,
+         f"speedup={row['speedup']:.2f}x "
+         f"batched={batched_ops:.0f}ops/s "
+         f"identical={row['identical']}")
+    return row
+
+
+def bench_multi_get(batch: int = 2048, rounds: int = 4) -> dict:
+    """The engine API head-to-head: multi_get-shaped batches.
+
+    Keys follow the hotspot distribution (same as the driver mixes) and
+    one untimed warm-up round lets promotions settle, so the timed
+    rounds measure batch resolution rather than the per-key SD
+    promotion machinery both paths share."""
+    cfg = make_cfg()
+    db_s, nk = DB_CACHE.get("hotrap", cfg, VALUE_LEN)
+    db_b, _ = DB_CACHE.get("hotrap", cfg, VALUE_LEN)
+    rng = np.random.default_rng(11)
+    dist = KeyDist("hotspot", nk)
+    warms = [dist.sample(rng, batch).astype(np.uint64) for _ in range(3)]
+    chunks = [dist.sample(rng, batch).astype(np.uint64)
+              for _ in range(rounds)]
+    for warm in warms:
+        assert [db_s.get(int(k)) for k in warm] == db_b.multi_get(warm)
+    with timer() as t_s:
+        oracle = [[db_s.get(int(k)) for k in ks] for ks in chunks]
+    with timer() as t_b:
+        batched = [db_b.multi_get(ks) for ks in chunks]
+    ops = batch * rounds
+    row = {
+        "batch": batch, "n_ops": ops,
+        "scalar_ops_per_s": ops / max(t_s.wall, 1e-9),
+        "batched_ops_per_s": ops / max(t_b.wall, 1e-9),
+        "speedup": t_s.wall / max(t_b.wall, 1e-9),
+        "identical": oracle == batched,
+    }
+    emit("driver/multi_get", t_b.wall / ops * 1e6,
+         f"speedup={row['speedup']:.2f}x identical={row['identical']}")
+    return row
+
+
+def run_all(ops: int) -> dict:
+    results: dict = {}
+    for mix in MIXES:
+        results[mix] = bench_mix(mix, ops)
+    results["multi_get"] = bench_multi_get()
+    return results
+
+
+def main() -> None:
+    run_all(n_ops())
+
+
+def smoke() -> None:
+    results = run_all(n_ops())
+    write_bench_json("driver", results)
+    failures = []
+    for mix in MIXES:
+        if not results[mix]["identical"]:
+            failures.append(f"driver/{mix}: batched results diverge "
+                            f"from the scalar oracle")
+    if not results["multi_get"]["identical"]:
+        failures.append("multi_get: batched results diverge from the "
+                        "per-key get loop")
+    ro = results["RO"]["speedup"]
+    if ro < 3.0:
+        failures.append(f"read-heavy speedup {ro:.2f}x < 3x gate")
+    if failures:
+        for f in failures:
+            print(f"SMOKE FAIL: {f}")
+        raise SystemExit(1)
+    print(f"SMOKE OK: batched driver {ro:.1f}x scalar on RO "
+          f"(multi_get {results['multi_get']['speedup']:.1f}x), all "
+          f"mixes byte-identical to the per-op oracle")
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

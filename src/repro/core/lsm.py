@@ -304,6 +304,277 @@ class TieredLSM:
     def delete(self, key: int) -> int:
         return self.put(key, TOMBSTONE_VLEN)
 
+    def put_many(self, keys, vlens, seqs=None) -> np.ndarray:
+        """Batched writes; returns the assigned seqs (int64 array),
+        byte-identical to the scalar `put` sequence.
+
+        ``vlens`` may be a scalar or a per-key array; ``seqs`` lets the
+        sharded router pre-assign cluster-wide sequence numbers
+        (ascending within the batch).  Memtable rotations land at the
+        same ops as the scalar path: the batch splits into sub-batches
+        at each *predicted* threshold crossing (the byte prefix-sum
+        ignores duplicate-key reclaim, so the prediction can only split
+        early — never straddle a real crossing), and the threshold test
+        against the real ``memtable_bytes`` after each sub-batch keeps
+        the rotation points exact.  The op clock advances once at the
+        end of the batch (`_tick_many`).
+        """
+        ks = np.ascontiguousarray(keys, dtype=np.uint64)
+        n = len(ks)
+        if n == 0:
+            return np.zeros(0, dtype=np.int64)
+        vl = (np.full(n, int(vlens), dtype=np.int64)
+              if np.ndim(vlens) == 0
+              else np.ascontiguousarray(vlens, dtype=np.int64))
+        if type(self).put is not TieredLSM.put:
+            return self._put_many_fallback(ks, vl, seqs)
+        sq = (np.arange(self.seq + 1, self.seq + 1 + n, dtype=np.int64)
+              if seqs is None
+              else np.ascontiguousarray(seqs, dtype=np.int64))
+        self.seq = int(sq[-1])
+        self.stats.puts += n
+        op_bytes = KEY_BYTES + np.where(vl == TOMBSTONE_VLEN, 0, vl)
+        limit = self.cfg.memtable_bytes
+        start = 0
+        while start < n:
+            room = limit - self.memtable_bytes
+            csum = np.cumsum(op_bytes[start:])
+            stop = start + min(
+                int(np.searchsorted(csum, room, "left")) + 1, n - start)
+            upd = dict(zip(ks[start:stop].tolist(),
+                           zip(sq[start:stop].tolist(),
+                               vl[start:stop].tolist())))
+            mt = self.memtable
+            removed = sum(KEY_BYTES + self._vbytes(mt[k][1])
+                          for k in upd if k in mt)
+            added = sum(KEY_BYTES + self._vbytes(v[1])
+                        for v in upd.values())
+            mt.update(upd)
+            self.memtable_bytes += added - removed
+            if self.memtable_bytes >= limit:
+                self._rotate_memtable()
+                self._flush_imm_memtables()
+                self._maybe_compact()
+            start = stop
+        self._tick_many(n)
+        return sq
+
+    def _put_many_fallback(self, ks: np.ndarray, vl: np.ndarray,
+                           seqs) -> np.ndarray:
+        out = np.empty(len(ks), dtype=np.int64)
+        vll = vl.tolist()
+        sl = (None if seqs is None
+              else np.ascontiguousarray(seqs, dtype=np.int64).tolist())
+        # lint: allow-loop (baseline-interposed write path: a subclass
+        # overriding `put` keeps scalar per-key semantics; the stock
+        # engine takes the vectorized sub-batch path above)
+        for i, k in enumerate(ks.tolist()):
+            if sl is not None:
+                self.seq = sl[i] - 1
+            out[i] = self.put(k, vll[i])
+        return out
+
+    def multi_get(self, keys, lat_out=None) -> list:
+        """Batched point lookups: ``[(seq, vlen) | None]`` per key, in
+        input order — byte-identical to ``[self.get(k) for k in keys]``.
+
+        Probe *resolution* is columnar: one folded-dict map over the
+        memtables and mPC, and per level group either one binary search
+        over a materialized GroupView or one fence-pointer
+        ``searchsorted`` per level, across the whole batch.  The
+        stateful *commit* — block-cache LRU accesses and I/O charges,
+        §3.3 promotion-cache inserts, per-key (fd, sd) fg-time deltas
+        into ``lat_out``, attribution records — replays per key in
+        input order, reproducing the scalar path's exact charge
+        sequence.  The op clock advances once (`_tick_many`).
+
+        ``lat_out``: optional float (n, 2) array receiving each key's
+        (fd, sd) foreground device-time delta, the runner's latency
+        recovery (docs/ARCHITECTURE.md "Batched execution").
+        """
+        ks = np.ascontiguousarray(keys, dtype=np.uint64)
+        n = len(ks)
+        if n == 0:
+            return []
+        cls = type(self)
+        if (cls.get is not TieredLSM.get
+                or cls._search_levels is not TieredLSM._search_levels
+                or cls._finish_get is not TieredLSM._finish_get):
+            # baseline-interposed read path (Mutant, SAS-Cache, PrismDB
+            # hook get/_search_levels): vectorizing would skip them
+            return self._multi_get_fallback(ks, lat_out)
+        st = self.stats
+        st.gets += n
+        self._tick_many(n)
+        obs = self._obs
+        attr_on = (obs.enabled and obs.attribution
+                   and lat_out is not None)
+        v = self.version
+        kl = ks.tolist()
+        # -- resolve 1: memtables, newest table wins -------------------
+        if self.imm_memtables:
+            folded: dict = {}
+            # lint: allow-loop (imm-memtable fold — bounded by the
+            # rotation backlog, not by batch size)
+            for t in reversed(self.imm_memtables):
+                folded.update(t)
+            folded.update(self.memtable)
+            mem_hits = list(map(folded.get, kl))
+        else:
+            mem_hits = list(map(self.memtable.get, kl))
+        res_seq = np.zeros(n, dtype=np.int64)
+        res_vlen = np.zeros(n, dtype=np.int64)
+        has = np.zeros(n, dtype=bool)
+        tier_c = np.full(n, 4, dtype=np.int8)   # 0..4 = mem/FD/PC/SD/miss
+        viewhit = np.zeros(n, dtype=bool)
+        mem_mask = np.array([h is not None for h in mem_hits], dtype=bool)
+        if mem_mask.any():
+            sel = np.flatnonzero(mem_mask)
+            res_seq[sel] = [mem_hits[i][0] for i in sel]
+            res_vlen[sel] = [mem_hits[i][1] for i in sel]
+            has[sel] = True
+            tier_c[sel] = 0
+        st.served_mem += int(mem_mask.sum())
+        ev: list = []        # pending charges: (pos, sid, blk, is_sd) arrays
+        pend = np.flatnonzero(~mem_mask)
+        # -- resolve 2: FD group ---------------------------------------
+        if len(pend):
+            f_seq, f_vlen, f_found, f_view = self._batch_probe_group(
+                ks, pend, "FD", v, ev, None)
+            viewhit[pend] |= f_view
+            w = pend[f_found]
+            res_seq[w] = f_seq[f_found]
+            res_vlen[w] = f_vlen[f_found]
+            has[w] = True
+            tier_c[w] = 1
+            st.served_fd += len(w)
+            pend = pend[~f_found]
+        # -- resolve 3: mutable promotion cache ------------------------
+        if len(pend):
+            pc_hits = list(map(self.mpc.get, ks[pend].tolist()))
+            pcm = np.array([h is not None for h in pc_hits], dtype=bool)
+            if pcm.any():
+                sel = np.flatnonzero(pcm)
+                w = pend[sel]
+                res_seq[w] = [pc_hits[i][0] for i in sel]
+                res_vlen[w] = [pc_hits[i][1] for i in sel]
+                has[w] = True
+                tier_c[w] = 2
+                st.served_pc += len(w)
+            pend = pend[~pcm]
+        # -- resolve 4: SD group (collect §3.3 touched lists) ----------
+        sd_touch: dict[int, list[int]] = {}
+        if len(pend):
+            s_seq, s_vlen, s_found, s_view = self._batch_probe_group(
+                ks, pend, "SD", v, ev, sd_touch)
+            viewhit[pend] |= s_view
+            w = pend[s_found]
+            res_seq[w] = s_seq[s_found]
+            res_vlen[w] = s_vlen[s_found]
+            has[w] = True
+            tier_c[w] = 3
+            st.served_sd += len(w)
+        st.misses += int(np.count_nonzero(~has)) + int(
+            np.count_nonzero(has & (res_vlen == TOMBSTONE_VLEN)))
+        # -- commit: replay charges per key, in input order ------------
+        if ev:
+            e_pos = np.concatenate([e[0] for e in ev])
+            e_rank = np.concatenate(
+                [np.full(len(e[0]), r, dtype=np.int32)
+                 for r, e in enumerate(ev)])
+            order = np.lexsort((e_rank, e_pos))
+            e_sid = np.concatenate([e[1] for e in ev])[order].tolist()
+            e_blk = np.concatenate([e[2] for e in ev])[order].tolist()
+            e_sd = np.concatenate([e[3] for e in ev])[order].tolist()
+            e_pos = e_pos[order].tolist()
+        else:
+            e_pos = e_sid = e_blk = e_sd = []
+        tiers = ("mem", "FD", "PC", "SD", "miss")
+        bc = self.block_cache
+        storage = self.storage
+        dev_fd = storage.dev["FD"]
+        dev_sd = storage.dev["SD"]
+        hotrap = self.cfg.hotrap
+        tomb = TOMBSTONE_VLEN
+        ep = 0
+        n_ev = len(e_pos)
+        b0 = r0 = 0
+        # lint: allow-loop (stateful batch commit: block-cache LRU
+        # accesses, per-key fg-time latency recovery and §3.3 promotion
+        # inserts are order-dependent — all probe *resolution* above is
+        # vectorized; this loop is O(1) bookkeeping per key)
+        for i in range(n):
+            if attr_on:
+                b0 = bc.hits
+                r0 = dev_fd.rand_reads + dev_sd.rand_reads
+            f0 = dev_fd.fg_time
+            s0 = dev_sd.fg_time
+            while ep < n_ev and e_pos[ep] == i:
+                if not bc.access((e_sid[ep], e_blk[ep])):
+                    storage.rand_read("SD" if e_sd[ep] else "FD",
+                                      BLOCK_BYTES, fg=True,
+                                      component="get")
+                ep += 1
+            if tier_c[i] == 3:          # SD hit: HotRAP promotion
+                vlen = int(res_vlen[i])
+                if hotrap and vlen != tomb:
+                    key = kl[i]
+                    if obs.enabled and self.ralt is not None:
+                        obs.tracer.instant(
+                            self._obs_track, "promo/get",
+                            {"key": int(key),
+                             "ralt_hot": bool(self.ralt.is_hot(key)),
+                             "score_bytes": float(
+                                 self.ralt.range_hot_bytes(key, key))})
+                    self._insert_pc(key, int(res_seq[i]), vlen,
+                                    sd_touch.get(i, []))
+            if lat_out is not None:
+                lat_out[i, 0] = dev_fd.fg_time - f0
+                lat_out[i, 1] = dev_sd.fg_time - s0
+                if attr_on:
+                    served = tiers[4 if res_vlen[i] == tomb
+                                   else int(tier_c[i])]
+                    cache_hits = bc.hits - b0
+                    obs.attr.stash_record(
+                        served,
+                        (dev_fd.rand_reads + dev_sd.rand_reads - r0
+                         + cache_hits),
+                        bool(viewhit[i]), cache_hits > 0,
+                        float(lat_out[i, 0] + lat_out[i, 1]))
+        # -- RALT hotness: one chunked batch for every live hit --------
+        if self.ralt is not None:
+            live = has & (res_vlen != tomb)
+            if live.any():
+                sel = np.flatnonzero(live)
+                self.ralt.record_access_many(
+                    ks[sel], res_vlen[sel].astype(np.uint32))
+        return [(int(res_seq[i]), int(res_vlen[i]))
+                if has[i] and res_vlen[i] != tomb else None
+                for i in range(n)]
+
+    def _multi_get_fallback(self, ks: np.ndarray, lat_out) -> list:
+        obs = self._obs
+        attr_on = (obs.enabled and obs.attribution
+                   and lat_out is not None)
+        dev = self.storage.dev
+        out: list = []
+        f0 = s0 = 0.0
+        # lint: allow-loop (baseline-interposed read path — subclasses
+        # overriding get/_search_levels keep per-key semantics; the
+        # stock engine takes the vectorized path above)
+        for i, k in enumerate(ks.tolist()):
+            if lat_out is not None:
+                f0 = dev["FD"].fg_time
+                s0 = dev["SD"].fg_time
+            out.append(self.get(k))
+            if lat_out is not None:
+                lat_out[i, 0] = dev["FD"].fg_time - f0
+                lat_out[i, 1] = dev["SD"].fg_time - s0
+                if attr_on:
+                    obs.attr.stash_pending(
+                        float(lat_out[i, 0] + lat_out[i, 1]))
+        return out
+
     def get(self, key: int):
         """Returns (seq, vlen) of the visible version, or None.
 
@@ -635,6 +906,184 @@ class TieredLSM:
             else:
                 return mid
         return None
+
+    # ------------------------------------------------------------------
+    # batched read path (vectorized batch execution)
+    # ------------------------------------------------------------------
+    def _batch_probe_group(self, ks: np.ndarray, idx: np.ndarray,
+                           group: str, version: Version,
+                           ev: list, touch: dict | None):
+        """Columnar `_probe_group`: resolve one level group for the
+        batch positions `idx`.  Returns (seqs, vlens, found_mask,
+        via_view) aligned with `idx`.  Pure resolution — no I/O or
+        cache state mutates here; pending charges are appended to `ev`
+        as (pos, sid, blk, is_sd) array tuples in scalar probe order
+        and the caller replays them per key in input order.  For the
+        SD group, `touch` collects each position's §3.3 touched-sid
+        list."""
+        nk = len(idx)
+        sub = ks[idx]
+        f_seq = np.zeros(nk, dtype=np.int64)
+        f_vlen = np.zeros(nk, dtype=np.int64)
+        f_found = np.zeros(nk, dtype=bool)
+        if (self._point_view_ok and self.cfg.remix_views
+                and self.cfg.point_view_gets):
+            sig = ((group,)
+                   + version.group_signature(group, self.cfg.n_fd_levels))
+            view = self._view_cache.peek(sig)
+            if view is not None:
+                self._batch_view_get(view, version, group, sub, idx, ev,
+                                     touch, f_seq, f_vlen, f_found)
+                return f_seq, f_vlen, f_found, np.ones(nk, dtype=bool)
+        self._batch_walk_levels(sub, idx, group, version, ev, touch,
+                                f_seq, f_vlen, f_found)
+        return f_seq, f_vlen, f_found, np.zeros(nk, dtype=bool)
+
+    def _batch_view_get(self, view: GroupView, version: Version,
+                        group: str, sub: np.ndarray, idx: np.ndarray,
+                        ev: list, touch: dict | None,
+                        f_seq: np.ndarray, f_vlen: np.ndarray,
+                        f_found: np.ndarray) -> None:
+        """`_view_point_get`, batched: one vectorized binary search
+        over an already-materialized GroupView for the whole sub-batch.
+        The view is authoritative for its group — absent keys charge
+        nothing; each winner charges exactly its data block.  The
+        probes-saved tally is the vectorized `probes_replaced`:
+        covering tables per key, split by run priority vs the winner."""
+        nv = len(view.keys)
+        if nv:
+            pos = np.searchsorted(view.keys, sub, "left")
+            posc = np.minimum(pos, nv - 1)
+            hit = (pos < nv) & (view.keys[posc] == sub)
+        else:
+            posc = np.zeros(len(sub), dtype=np.int64)
+            hit = np.zeros(len(sub), dtype=bool)
+        if len(view.sst_mins):
+            cover = ((view.sst_mins[None, :] <= sub[:, None])
+                     & (sub[:, None] <= view.sst_maxs[None, :]))
+            saved = np.maximum(cover.sum(axis=1) - 1, 0)
+            if hit.any():
+                win_pri = view.sst_pris[view.src[posc]]
+                above = (cover
+                         & (view.sst_pris[None, :] < win_pri[:, None])
+                         ).sum(axis=1)
+                saved = np.where(hit, above, saved)
+        else:
+            saved = np.zeros(len(sub), dtype=np.int64)
+        c = self.point_counters
+        c.view_gets += len(sub)
+        c.probes_saved += int(saved.sum())
+        self.stats.get_view_hits += len(sub)
+        self.stats.get_probes_saved += int(saved.sum())
+        if not hit.any():
+            return
+        w = np.flatnonzero(hit)
+        wp = posc[w]
+        f_seq[w] = view.seqs[wp]
+        f_vlen[w] = view.vlens[wp]
+        f_found[w] = True
+        sids = np.asarray(view.sids, dtype=np.int64)
+        win_sids = sids[view.src[wp]]
+        ev.append((idx[w].astype(np.int64), win_sids,
+                   view.blks[wp].astype(np.int64),
+                   np.full(len(w), group == "SD", dtype=bool)))
+        if touch is not None and group == "SD":
+            touched = version.sd_touched_many(sub[w], win_sids,
+                                              self.cfg.n_fd_levels)
+            touch.update(zip(idx[w].tolist(), touched))
+
+    def _batch_walk_levels(self, sub: np.ndarray, idx: np.ndarray,
+                           group: str, version: Version, ev: list,
+                           touch: dict | None, f_seq: np.ndarray,
+                           f_vlen: np.ndarray,
+                           f_found: np.ndarray) -> None:
+        """Columnar `_search_levels`: walk the group's levels top-down,
+        resolving every still-unresolved key per level with one
+        fence-pointer `searchsorted`; each touched SSTable is probed
+        once for its whole candidate sub-batch."""
+        n_fd = self.cfg.n_fd_levels
+        levels = version.levels
+        rng = (range(0, n_fd) if group == "FD"
+               else range(n_fd, len(levels)))
+        active = np.ones(len(sub), dtype=bool)
+        # lint: allow-loop (per-level walk — bounded by tree topology,
+        # not batch size; the per-key work inside each level is
+        # vectorized)
+        for li in rng:
+            if not active.any():
+                return
+            sstables = levels[li]
+            if not sstables:
+                continue
+            if li == 0:
+                # L0 runs overlap: probe in list order (newest first)
+                # lint: allow-loop (L0 run list — bounded by the
+                # compaction trigger, not by batch size)
+                for s in sstables:
+                    cand = np.flatnonzero(
+                        active & (np.uint64(s.min_key) <= sub)
+                        & (sub <= np.uint64(s.max_key)))
+                    if len(cand):
+                        self._batch_probe_sst(
+                            s, sub, cand, idx, ev, touch, group,
+                            f_seq, f_vlen, f_found, active)
+                continue
+            mins, maxs, _sids = version.level_fences(li)
+            pos = np.searchsorted(maxs, sub, "left")
+            posc = np.minimum(pos, len(sstables) - 1)
+            cand = active & (pos < len(sstables)) & (mins[posc] <= sub)
+            csel = np.flatnonzero(cand)
+            if not len(csel):
+                continue
+            # lint: allow-loop (per-touched-SSTable drain: one
+            # vectorized bloom + binary-search probe per *distinct*
+            # table, not per key)
+            for t in np.unique(posc[csel]):
+                self._batch_probe_sst(
+                    sstables[int(t)], sub, csel[posc[csel] == t],
+                    idx, ev, touch, group, f_seq, f_vlen, f_found,
+                    active)
+
+    @staticmethod
+    def _batch_probe_sst(s: SSTable, sub: np.ndarray, sel: np.ndarray,
+                         idx: np.ndarray, ev: list, touch: dict | None,
+                         group: str, f_seq: np.ndarray,
+                         f_vlen: np.ndarray, f_found: np.ndarray,
+                         active: np.ndarray) -> None:
+        """Probe one SSTable for the candidate positions `sel`:
+        vectorized bloom gate, one batched binary search; every
+        bloom-positive key queues a data-block charge (false positives
+        charge the block they would have read, exactly like the scalar
+        walk)."""
+        keys = sub[sel]
+        if touch is not None:
+            # §3.3 touched list: every *candidate* table, pre-bloom
+            # lint: allow-loop (per-candidate list append — plain
+            # bookkeeping on the few keys that reached SD, no I/O)
+            for p in idx[sel].tolist():
+                touch.setdefault(p, []).append(s.sid)
+        may = s.bloom.may_contain_many(keys)
+        if not may.any():
+            return
+        psel = sel[may]
+        pk = keys[may]
+        if s.n:
+            pos = np.searchsorted(s.keys, pk)
+            posc = np.minimum(pos, s.n - 1)
+            found = (pos < s.n) & (s.keys[posc] == pk)
+            blks = s.block_of[posc].astype(np.int64)
+        else:
+            found = np.zeros(len(pk), dtype=bool)
+            blks = np.zeros(len(pk), dtype=np.int64)
+        ev.append((idx[psel].astype(np.int64),
+                   np.full(len(psel), s.sid, dtype=np.int64), blks,
+                   np.full(len(psel), group == "SD", dtype=bool)))
+        if found.any():
+            w = psel[found]
+            f_seq[w] = s.seqs[pos[found]]
+            f_vlen[w] = s.vlens[pos[found]]
+            f_found[w] = True
+            active[w] = False
 
     # ------------------------------------------------------------------
     # promotion cache (§3.3)
@@ -1056,6 +1505,18 @@ class TieredLSM:
     # ------------------------------------------------------------------
     def _tick(self) -> None:
         self.now += 1
+        self._fire_due()
+
+    def _tick_many(self, n: int) -> None:
+        """Advance the op clock by a whole batch.  Identical to `n`
+        scalar `_tick`s except that everything that comes due *inside*
+        the batch fires at its start — a placement-only timing shift
+        (checker promotions and deferred PC inserts never change
+        visibility; see docs/ARCHITECTURE.md "Batched execution")."""
+        self.now += n
+        self._fire_due()
+
+    def _fire_due(self) -> None:
         if self._checker_queue and self._checker_queue[0][0] <= self.now:
             due = [c for c in self._checker_queue if c[0] <= self.now]
             self._checker_queue = [c for c in self._checker_queue

@@ -259,6 +259,31 @@ class RALT:
         self._advance_clocks(nbytes)
         self._maybe_flush_or_evict()
 
+    def record_access_many(self, keys: np.ndarray,
+                           vlens: np.ndarray) -> None:
+        """Vectorized `record_access` for the batched point-read path
+        (`TieredLSM.multi_get`): the whole batch lands as one numpy
+        chunk at full per-record score — unlike `record_range_access`,
+        a batch of gets is n independent accesses, so no scan-length
+        clipping.  Per-record ticks are reconstructed from the byte
+        prefix-sum, so every record carries exactly the tick it would
+        have been logged at had the accesses arrived one by one; the
+        clocks then advance by the batch total and the flush/evict
+        check runs once at the batch edge (a placement-only shift)."""
+        if len(keys) == 0:
+            return
+        keys = np.ascontiguousarray(keys, dtype=np.uint64)
+        vlens = np.ascontiguousarray(vlens, dtype=np.uint32)
+        sizes = vlens.astype(np.int64) + KEY_BYTES
+        csum = np.cumsum(sizes)
+        before = self._accessed_since_tick + csum - sizes
+        ticks = self.tick + before // self.cfg.tick_bytes
+        self.buf_chunks.append((keys, vlens, ticks.astype(np.int64),
+                                np.ones(len(keys))))
+        self._buf_chunk_len += len(keys)
+        self._advance_clocks(int(csum[-1]))
+        self._maybe_flush_or_evict()
+
     def seed_records(self, keys: np.ndarray, vlens: np.ndarray) -> None:
         """Transplant access records from another RALT (shard-migration
         hotness handoff, core/shards.py): each key lands as one

@@ -192,9 +192,121 @@ def _merged_storage_snapshot(sts: list) -> dict:
     return agg
 
 
+@dataclasses.dataclass
+class _DriveCtx:
+    """Per-run plumbing shared by `_run_segment` calls (one bundle
+    instead of nine positional threading arguments)."""
+    db: object
+    obs: object
+    rep: object
+    static_sts: list | None
+    lat_hist: TierLatencyHistogram | None
+    track_attr: bool
+    collect_latency: bool
+    fresh_value: int
+    results_out: list | None
+
+
+def _run_segment(ctx: _DriveCtx, g0: int, keys: np.ndarray,
+                 scan_lens: np.ndarray, r_mask: np.ndarray,
+                 s_mask: np.ndarray, w_mask: np.ndarray,
+                 tail: bool) -> None:
+    """Execute one visibility-homogeneous workload segment starting at
+    global op index `g0`: point reads flow through one columnar
+    `multi_get`, writes through one `put_many` (seq assignment is
+    order-preserving), scans per op (their extent is data-dependent;
+    their batching lives in the router's planned fan-out).  Reordering
+    within the segment is sound because the caller's collide check /
+    run-length split guarantees the segment's reads cannot observe its
+    writes; see docs/ARCHITECTURE.md "Batched execution"."""
+    db = ctx.db
+    obs = ctx.obs
+    rep = ctx.rep
+    r_sel = np.flatnonzero(r_mask)
+    if len(r_sel):
+        lat = (np.zeros((len(r_sel), 2)) if ctx.collect_latency else None)
+        ev0 = len(rep.events) if rep is not None else 0
+        res = db.multi_get(keys[g0 + r_sel], lat_out=lat)
+        if ctx.results_out is not None:
+            ro = ctx.results_out
+            # lint: allow-loop (oracle-capture scatter — tests only;
+            # per-op results are heterogeneous python objects)
+            for j, r in zip(r_sel.tolist(), res):
+                ro[g0 + j] = r
+        if ctx.collect_latency:
+            if tail:
+                ctx.lat_hist.add_many(lat[:, 0], lat[:, 1])
+            if ctx.track_attr:
+                obs.attr.commit_stashed(
+                    cutover=(rep is not None and len(rep.events) != ev0),
+                    migrating=(rep is not None and rep._job is not None))
+    # lint: allow-loop (per-scan execution — each range's extent is
+    # data-dependent, so a scan is its own batch; the fan-out under it
+    # is the router's planned per-shard scatter)
+    for j in np.flatnonzero(s_mask).tolist():
+        gi = g0 + j
+        f0 = ()
+        ev0 = 0
+        if ctx.collect_latency:
+            base = (ctx.static_sts if ctx.static_sts is not None
+                    else _live_storages(db))
+            f0 = [(st, st.dev["FD"].fg_time, st.dev["SD"].fg_time)
+                  for st in base]
+            ev0 = len(rep.events) if rep is not None else 0
+        out = db.scan(int(keys[gi]), int(scan_lens[gi]))
+        if ctx.results_out is not None:
+            ctx.results_out[gi] = out
+        if ctx.collect_latency:
+            # shared-nothing: a fan-out op's shards serve in parallel,
+            # so its latency is the slowest shard's delta.  Dynamic
+            # topology: candidates = storages live at op start (a
+            # cutover inside the op may have retired one — its fg
+            # charges still belong to this op) plus any born during
+            # the op (baseline 0).
+            cand = f0
+            if ctx.static_sts is None:
+                known = {id(st) for st, _, _ in f0}
+                cand = f0 + [(st, 0.0, 0.0) for st in _live_storages(db)
+                             if id(st) not in known]
+            fd_d = max(st.dev["FD"].fg_time - b for st, b, _ in cand)
+            sd_d = max(st.dev["SD"].fg_time - b for st, _, b in cand)
+            if tail:
+                ctx.lat_hist.add(fd_d, sd_d)
+            if ctx.track_attr:
+                obs.attr.commit(
+                    fd_d + sd_d,
+                    cutover=(rep is not None and len(rep.events) != ev0),
+                    migrating=(rep is not None and rep._job is not None))
+    w_sel = np.flatnonzero(w_mask)
+    if len(w_sel):
+        seqs = db.put_many(keys[g0 + w_sel], ctx.fresh_value)
+        if ctx.results_out is not None:
+            ro = ctx.results_out
+            # lint: allow-loop (oracle-capture scatter — tests only)
+            for j, q in zip(w_sel.tolist(), np.asarray(seqs).tolist()):
+                ro[g0 + j] = q
+
+
 def run_workload(db, wl: Workload, name: str = "?",
-                 collect_latency: bool = True) -> RunResult:
+                 collect_latency: bool = True, chunk_ops: int = 2048,
+                 results_out: list | None = None) -> RunResult:
     """Drive one workload through a TieredLSM *or* a ShardedTieredLSM.
+
+    Batched execution (ISSUE 8): the workload is sliced into
+    struct-of-arrays chunks of `chunk_ops` ops, each grouped by op
+    kind and executed through the engine's columnar batch APIs
+    (`multi_get` / `put_many`; scans via the router's planned
+    fan-out).  Chunk edges are forced at the final-10% boundary so the
+    tail accounting snapshot is exact; a chunk whose reads could
+    observe its writes (shared keys, or any scan sharing a chunk with
+    a write) falls back to exact run-length segments in op order.
+    Results and seqs are byte-identical to the former per-op loop;
+    per-op (fd, sd) latency deltas are recovered from the engine's
+    per-key fg-time snapshots, so the latency histogram and p99
+    attribution stay bit-compatible.  `results_out`, when given, is
+    extended with each op's outcome in op order (get hit/None, put
+    seq, scan list) — the oracle-equivalence hook for tests and
+    `benchmarks/driver_bench.py`.
 
     Sharded runs are shared-nothing: every shard's devices serve in
     parallel, so the completion window is the *busiest single device
@@ -235,11 +347,24 @@ def run_workload(db, wl: Workload, name: str = "?",
     rep0_events = (rep.n_splits + rep.n_merges) if rep is not None else 0
     rep0_bytes = (rep.migrated_read_bytes + rep.migrated_write_bytes
                   if rep is not None else 0)
-    # lint: allow-loop (the per-op driver itself — dissolving it is the
-    # ROADMAP's vectorized-batch refactor: ops must batch by kind and
-    # flow through multi_get/batched puts before this loop can go)
-    for j in range(n):
-        if j == t10_start_ops:
+    ops = np.ascontiguousarray(wl.ops, dtype=np.int64)
+    keys = np.ascontiguousarray(wl.keys, dtype=np.uint64)
+    scan_lens = (np.ascontiguousarray(wl.scan_lens, dtype=np.int64)
+                 if wl.scan_lens is not None
+                 else np.zeros(n, dtype=np.int64))
+    if results_out is not None:
+        results_out.extend([None] * n)
+    ctx = _DriveCtx(db=db, obs=obs, rep=rep, static_sts=static_sts,
+                    lat_hist=lat_hist, track_attr=track_attr,
+                    collect_latency=collect_latency,
+                    fresh_value=fresh_value, results_out=results_out)
+    step = max(int(chunk_ops), 1)
+    cuts = sorted({t10_start_ops, n} | set(range(0, n, step)))
+    # lint: allow-loop (batch-bounded: one iteration per chunk of
+    # `chunk_ops` ops — the former per-op driver loop is dissolved into
+    # the engine's columnar multi_get/put_many batch calls below)
+    for c0, c1 in zip(cuts[:-1], cuts[1:]):
+        if c0 == t10_start_ops:
             busy90 = {(id(st), t): st.dev[t].busy
                       for st in _db_storages(db) for t in tiers}
             s = db.stats
@@ -248,51 +373,36 @@ def run_workload(db, wl: Workload, name: str = "?",
             scanned90 = s.scanned_records
             scan_hits90 = (s.scan_served_mem + s.scan_served_fd
                            + s.scan_served_pc)
-        op, key = int(wl.ops[j]), int(wl.keys[j])
-        if op == OP_READ or op == OP_SCAN:
-            if collect_latency:
-                base = static_sts if static_sts is not None \
-                    else _live_storages(db)
-                f0 = [(st, st.dev["FD"].fg_time, st.dev["SD"].fg_time)
-                      for st in base]
-                ev0 = len(rep.events) if rep is not None else 0
-            if op == OP_READ:
-                db.get(key)
-            else:
-                db.scan(key, int(wl.scan_lens[j]))
-            if collect_latency:
-                # shared-nothing: a fan-out op's shards serve in
-                # parallel, so its latency is the slowest shard's delta
-                # (for a point get only one shard moves — max == delta).
-                # Dynamic topology: candidates = storages live at op
-                # start (a cutover inside the op may have retired one —
-                # its fg charges still belong to this op) plus any born
-                # during the op (baseline 0).
-                cand = f0
-                if static_sts is None:
-                    known = {id(st) for st, _, _ in f0}
-                    cand = f0 + [(st, 0.0, 0.0)
-                                 for st in _live_storages(db)
-                                 if id(st) not in known]
-                fd_d = max(st.dev["FD"].fg_time - b
-                           for st, b, _ in cand)
-                sd_d = max(st.dev["SD"].fg_time - b
-                           for st, _, b in cand)
-                if j >= t10_start_ops:
-                    lat_hist.add(fd_d, sd_d)
-                if track_attr:
-                    obs.attr.commit(
-                        fd_d + sd_d,
-                        cutover=(rep is not None
-                                 and len(rep.events) != ev0),
-                        migrating=(rep is not None
-                                   and rep._job is not None))
-        elif op == OP_INSERT:
-            db.put(key, fresh_value)
+        co = ops[c0:c1]
+        w_mask = (co == OP_INSERT) | (co == OP_UPDATE)
+        r_mask = co == OP_READ
+        s_mask = co == OP_SCAN
+        tail = c0 >= t10_start_ops
+        # a whole chunk reorders into read/scan/write batches only when
+        # its reads provably cannot observe its writes: disjoint
+        # read/write key sets, and no scan sharing the chunk with a
+        # write (a scan's reach is data-dependent).  Otherwise fall
+        # back to exact run-length segments in op order — each segment
+        # still executes through the batched engine APIs.
+        collide = w_mask.any() and (
+            s_mask.any()
+            or bool(np.isin(keys[c0:c1][r_mask],
+                            keys[c0:c1][w_mask]).any()))
+        if collide:
+            flips = np.flatnonzero(np.diff(w_mask.astype(np.int8))) + 1
+            edges = [0, *flips.tolist(), c1 - c0]
+            # lint: allow-loop (data-dependent run-length segmentation
+            # of a read/write-colliding chunk — rare; segments stay
+            # batched)
+            for a, b in zip(edges[:-1], edges[1:]):
+                _run_segment(ctx, c0 + a, keys, scan_lens,
+                             r_mask[a:b], s_mask[a:b], w_mask[a:b],
+                             tail)
         else:
-            db.put(key, fresh_value)
+            _run_segment(ctx, c0, keys, scan_lens, r_mask, s_mask,
+                         w_mask, tail)
         if obs_on:
-            obs.on_op(db)
+            obs.on_ops(db, c1 - c0)
     sts = _db_storages(db)
     total = max(st.sim_time for st in sts)
     # Throughput = ops in window / bottleneck-device work in the window

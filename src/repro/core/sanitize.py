@@ -356,14 +356,29 @@ class SanitizedDB:
         s.after_op()
         return got
 
-    def multi_get(self, keys) -> list:
-        out = self._db.multi_get(keys)
+    def multi_get(self, keys, lat_out=None) -> list:
+        out = self._db.multi_get(keys, lat_out=lat_out)
         s = self.sanitizer
         s._n_gets += len(out)
         for key, got in zip(keys, out):
             s.check_get(int(key), got)
         s.after_op()
         return out
+
+    def put_many(self, keys, vlens):
+        seqs = self._db.put_many(keys, vlens)
+        s = self.sanitizer
+        s._n_puts += len(seqs)
+        vl = (np.full(len(seqs), int(vlens), dtype=np.int64)
+              if np.ndim(vlens) == 0
+              else np.asarray(vlens, dtype=np.int64))
+        for key, v in zip(np.asarray(keys, dtype=np.uint64).tolist(),
+                          vl.tolist()):
+            s.record_put(int(key), int(v))
+        for seq in np.asarray(seqs).tolist():
+            s.note_seq(int(seq))
+        s.after_op()
+        return seqs
 
     def _check_scan_result(self, out, lo, hi=None) -> None:
         s = self.sanitizer

@@ -133,6 +133,18 @@ class Observability:
         if m.enabled:
             m.maybe_sample(self.now(), getattr(db, "_db", db), self.tracer)
 
+    def on_ops(self, db, k: int) -> None:
+        """Batch-boundary variant of `on_op`: one cadence check per
+        chunk of `k` ops.  Sampling rides the *simulated* clock
+        (`maybe_sample` compares `now()` against the next sample time),
+        so dropping from per-op to per-chunk checks shifts each sample
+        by at most one chunk of sim time — the series cadence is
+        statistically unchanged while the recorder does 1/k the work."""
+        del k  # cadence is sim-time-driven; the count documents intent
+        m = self.metrics
+        if m.enabled:
+            m.maybe_sample(self.now(), getattr(db, "_db", db), self.tracer)
+
     # -- export --------------------------------------------------------
     def export(self, trace_path: str | None = None,
                metrics_path: str | None = None) -> None:

@@ -43,6 +43,9 @@ class AttributionSampler:
         self.n_kept = 0
         self.n_seen = 0
         self._pending: tuple | None = None
+        # batched ops queue their (record, latency) pairs here until the
+        # runner commits the whole batch at its edge
+        self._stash: list[tuple[tuple, float]] = []
         # begin_get snapshots (single-threaded engine, one op in flight)
         self._s_bc = 0
         self._s_vh = 0
@@ -52,6 +55,7 @@ class AttributionSampler:
         self.n_kept = 0
         self.n_seen = 0
         self._pending = None
+        self._stash = []
 
     # -- engine half ---------------------------------------------------
     def begin_get(self, db) -> None:
@@ -67,6 +71,39 @@ class AttributionSampler:
         view_hits = db.stats.get_view_hits - self._s_vh
         self._pending = (TIER_CODES.get(tier, TIER_CODES["miss"]),
                          probes + cache_hits, view_hits > 0, cache_hits > 0)
+
+    # -- engine half, batched (vectorized batch execution) -------------
+    def stash_record(self, tier: str, probes: int, view_hit: bool,
+                     cache_hit: bool, lat: float) -> None:
+        """Queue one op's record from inside a batched call.  The batch
+        path replays I/O charges per key and computes the per-op deltas
+        itself, so the record arrives fully formed — latency included —
+        and waits for the runner's batch-edge `commit_stashed`."""
+        self._stash.append(((TIER_CODES.get(tier, TIER_CODES["miss"]),
+                             probes, view_hit, cache_hit), lat))
+
+    def stash_pending(self, lat: float) -> None:
+        """Move a scalar `begin_get`/`end_get` pending record into the
+        batch queue (per-key fallback paths inside a batched call)."""
+        if self._pending is not None:
+            self._stash.append((self._pending, lat))
+            self._pending = None
+
+    def commit_stashed(self, cutover: bool = False,
+                       migrating: bool = False) -> None:
+        """Runner half, batch edge: commit every queued record.
+        Repartition cutovers land at batched-call boundaries
+        (`_account_ops`), so a batch-spanning cutover flag attaches to
+        the batch's last op only."""
+        stash = self._stash
+        if not stash:
+            return
+        self._stash = []
+        last = len(stash) - 1
+        for i, (pend, lat) in enumerate(stash):
+            self._pending = pend
+            self.commit(lat, cutover=cutover and i == last,
+                        migrating=migrating)
 
     # -- runner half ---------------------------------------------------
     def commit(self, lat: float, cutover: bool = False,

@@ -1,0 +1,266 @@
+"""Batched execution (ISSUE 8): columnar driver/engine paths vs the
+per-op scalar oracle.
+
+The contract under test is *visibility equivalence*: every result a
+client can observe — get hits/misses/tombstones, put seqs, scan record
+lists — is byte-identical whether ops flow one at a time through
+``get``/``put``/``scan`` or in struct-of-arrays batches through
+``multi_get``/``put_many``/the batched ``run_workload``.  Placement
+(promotion timing, checker/flush scheduling, I/O accounting) may shift
+within a batch; latency quantiles stay within one log-bin.
+
+Covers: engine ``multi_get``/``put_many`` twins (hits, misses,
+tombstones, rotation-exact seqs), the baseline read-hook fallback
+(Mutant overrides ``get``), the batched driver at N in {1, 4} shards
+over get/put/scan mixes, a forced repartition cutover mid-run,
+sanitized (wrapped) batched runs, latency-histogram chunk invariance,
+``RALT.record_access_many`` clock parity, and the router's planned
+scan fan-out.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (LSMConfig, RALT, RaltConfig, ShardConfig,
+                        StorageSim, make_sharded_system, make_system,
+                        sanitize_db)
+from repro.core.runner import run_workload
+from repro.data.workloads import OP_READ, OP_SCAN, KeyDist, ycsb
+from repro.obs.metrics import _EDGES
+
+KIB = 1024
+MIB = 1024 * 1024
+KEYSPACE = 600
+VLEN = 120
+
+
+def small_cfg(**kw):
+    base = dict(fd_size=256 * KIB, sd_size=2 * MIB,
+                target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                block_cache_bytes=16 * KIB, checker_delay_ops=16,
+                hotrap=True)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def loaded(system="hotrap", cfg=None, n_shards=1, tombstones=False,
+           seed=0, **scfg_kw):
+    """One deterministically-loaded store (twins come from calling this
+    twice with the same arguments)."""
+    cfg = cfg or small_cfg()
+    if n_shards == 1:
+        db = make_system(system, cfg, seed=seed)
+    else:
+        scfg = ShardConfig(n_shards=n_shards, partitioning="range",
+                           key_space=KEYSPACE, **scfg_kw)
+        db = make_sharded_system(system, cfg, shard_cfg=scfg, seed=seed)
+    for k in range(KEYSPACE):
+        db.put(k, VLEN)
+    if tombstones:
+        for k in range(0, KEYSPACE // 4, 7):
+            db.delete(k)
+    return db
+
+
+def scalar_drive(db, wl, out=None):
+    """The pre-batching oracle: one engine call per op, in op order."""
+    out = [] if out is None else out
+    for j in range(len(wl.ops)):
+        op, key = int(wl.ops[j]), int(wl.keys[j])
+        if op == OP_READ:
+            out.append(db.get(key))
+        elif op == OP_SCAN:
+            out.append(db.scan(key, int(wl.scan_lens[j])))
+        else:
+            out.append(db.put(key, wl.value_len))
+    return out
+
+
+# ----------------------------------------------------------------------
+# engine-level twins: multi_get / put_many
+# ----------------------------------------------------------------------
+def test_multi_get_matches_scalar_gets():
+    """Hits, misses (beyond the loaded range) and tombstones all round-
+    trip byte-identically, and the get/miss counters agree."""
+    a = loaded(tombstones=True)
+    b = loaded(tombstones=True)
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        keys = np.concatenate([
+            rng.integers(0, KEYSPACE, 96),            # mostly hits
+            rng.integers(0, KEYSPACE // 4, 16),       # tombstone-rich
+            rng.integers(KEYSPACE, KEYSPACE + 40, 16),  # misses
+        ]).astype(np.uint64)
+        rng.shuffle(keys)
+        assert b.multi_get(keys) == [a.get(int(k)) for k in keys]
+    assert b.stats.gets == a.stats.gets
+    assert b.stats.misses == a.stats.misses
+
+
+def test_multi_get_duplicate_keys_in_one_batch():
+    a, b = loaded(), loaded()
+    keys = np.array([5, 5, 5, 17, 5, KEYSPACE + 1, 17], dtype=np.uint64)
+    assert b.multi_get(keys) == [a.get(int(k)) for k in keys]
+
+
+def test_put_many_matches_scalar_puts_across_rotations():
+    """Seq assignment is order-identical even when the batch spans
+    several memtable rotations, and the resulting stores serve every
+    key identically."""
+    a, b = loaded(), loaded()
+    rng = np.random.default_rng(5)
+    keys = rng.integers(0, KEYSPACE, 400).astype(np.uint64)
+    # 400 * (key + 120B) >> 16 KiB memtable: multiple rotations inside
+    # the one batch
+    scalar = [a.put(int(k), VLEN) for k in keys]
+    batched = b.put_many(keys, VLEN)
+    assert np.asarray(batched).tolist() == scalar
+    assert b.seq == a.seq
+    assert b.stats.puts == a.stats.puts
+    for k in range(0, KEYSPACE, 3):
+        assert b.get(k) == a.get(k), k
+
+
+def test_multi_get_falls_back_when_read_hooks_overridden():
+    """Baselines that override the scalar read path (Mutant) must get
+    the per-key fallback, not the columnar resolution — identical
+    results either way."""
+    a = loaded("mutant")
+    b = loaded("mutant")
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, KEYSPACE + 20, 128).astype(np.uint64)
+    assert b.multi_get(keys) == [a.get(int(k)) for k in keys]
+    assert b.stats.gets == a.stats.gets
+
+
+# ----------------------------------------------------------------------
+# driver-level oracle equivalence
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("n_shards", [1, 4])
+@pytest.mark.parametrize("mix", ["RW", "UH", "SR"])
+def test_run_workload_matches_scalar_oracle(mix, n_shards):
+    """get/put/scan mixes at N in {1, 4} shards: the batched driver's
+    per-op results equal the per-op loop's, byte for byte.  UH updates
+    hot keys, so chunks collide and exercise the run-length split."""
+    wl = ycsb(mix, KeyDist("hotspot", KEYSPACE), 2500, VLEN, seed=11)
+    oracle_db = loaded(n_shards=n_shards)
+    scalar = scalar_drive(oracle_db, wl)
+    db = loaded(n_shards=n_shards)
+    batched: list = []
+    res = run_workload(db, wl, name=f"batch_{mix}", results_out=batched)
+    assert batched == scalar
+    assert res.n_ops == len(wl.ops)
+    assert db.stats.gets == oracle_db.stats.gets
+    assert db.stats.puts == oracle_db.stats.puts
+    assert db.stats.scanned_records == oracle_db.stats.scanned_records
+
+
+def test_run_workload_cutover_mid_run_stays_exact():
+    """A repartitioning range cluster splits/merges *during* the
+    batched run; results still match an unsharded scalar oracle and the
+    run reports the repartitions."""
+    cfg = small_cfg(fd_size=512 * KIB, sd_size=4 * MIB)
+    scfg = ShardConfig(n_shards=4, partitioning="range",
+                       key_space=KEYSPACE, repartition=True,
+                       repartition_interval_ops=300,
+                       repartition_cooldown_ops=200,
+                       migration_records_per_op=64,
+                       memtable_floor=8 * KIB,
+                       block_cache_floor=8 * KIB)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    oracle = make_system("hotrap", cfg, seed=0)
+    for k in range(KEYSPACE):
+        db.put(k, VLEN)
+        oracle.put(k, VLEN)
+    dist = KeyDist("hotspot", KEYSPACE, hot_frac=0.10, scramble=False)
+    wl = ycsb("RW", dist, 6000, VLEN, seed=7)
+    scalar = scalar_drive(oracle, wl)
+    batched: list = []
+    res = run_workload(db, wl, name="cutover", results_out=batched)
+    assert res.n_repartitions >= 1
+    assert batched == scalar
+
+
+def test_run_workload_under_sanitizer():
+    """The runtime sanitizer wraps the batch entry points too: a
+    sanitized batched run completes, stays oracle-identical, and closes
+    with its invariant counters satisfied."""
+    wl = ycsb("RW", KeyDist("hotspot", KEYSPACE), 1500, VLEN, seed=13)
+    oracle_db = loaded()
+    scalar = scalar_drive(oracle_db, wl)
+    db = sanitize_db(make_system("hotrap", small_cfg(), seed=0),
+                     check_every=32)
+    for k in range(KEYSPACE):       # load through the wrapper so its
+        db.put(k, VLEN)             # conservation counters see every op
+    batched: list = []
+    run_workload(db, wl, name="sanitized", results_out=batched)
+    assert batched == scalar
+    report = db.close()
+    assert report["ops"] >= KEYSPACE     # batch crossings count once
+    assert report["checks_op_conservation"] > 0
+
+
+def test_latency_quantiles_chunk_invariant():
+    """p50/p99 from a fully-batched run sit within one log-bin of the
+    per-op-chunked run (placement may shift inside a batch; the
+    recovered per-op deltas may not)."""
+    wl = ycsb("RO", KeyDist("hotspot", KEYSPACE), 2500, VLEN, seed=17)
+    r1 = run_workload(loaded(), wl, name="c1", chunk_ops=1)
+    rn = run_workload(loaded(), wl, name="cN", chunk_ops=2048)
+    assert r1.latency.count == rn.latency.count
+    for q1, qn in ((r1.p50, rn.p50), (r1.p99, rn.p99)):
+        assert abs(int(np.searchsorted(_EDGES, q1))
+                   - int(np.searchsorted(_EDGES, qn))) <= 1, (q1, qn)
+
+
+# ----------------------------------------------------------------------
+# RALT batch recording
+# ----------------------------------------------------------------------
+def test_record_access_many_matches_scalar_clocks():
+    """Tick/epoch clocks and per-record tick stamps are exact: a batch
+    crossing several tick boundaries lands every record on the same
+    tick the scalar loop would have given it."""
+    def mk():
+        # limits high enough that no flush/evict fires mid-stream —
+        # eviction timing is batch-granular by design (placement), and
+        # this test pins the *visibility* half: clocks and tick stamps
+        cfg = RaltConfig(fd_size=64 * KIB, hot_set_limit=1 * MIB,
+                         phys_limit=1 * MIB, buffer_bytes=4 * MIB)
+        return RALT(cfg, StorageSim())
+    a, b = mk(), mk()
+    rng = np.random.default_rng(19)
+    for _ in range(4):
+        keys = rng.integers(0, 200, 64)
+        vlens = rng.integers(50, 400, 64).astype(np.uint32)
+        for k, v in zip(keys.tolist(), vlens.tolist()):
+            a.record_access(k, v)
+        b.record_access_many(keys.astype(np.uint64), vlens)
+        assert b.tick == a.tick
+        assert b._accessed_since_tick == a._accessed_since_tick
+        assert b.epoch == a.epoch
+    # same clocks *and* same stamps: after one flush each, the merged
+    # hot sets agree record for record
+    a._flush_buffer()
+    b._flush_buffer()
+    assert b.hot_set_bytes == a.hot_set_bytes
+    for k in range(0, 200, 7):
+        assert b.is_hot(k) == a.is_hot(k), k
+
+
+# ----------------------------------------------------------------------
+# router: planned scan fan-out
+# ----------------------------------------------------------------------
+def test_sharded_scan_fanout_matches_oracle():
+    """Range-cluster scans fan out across shards in one planned pass;
+    results and the served-record accounting match the unsharded
+    oracle (the fan-out's speculative overfetch is folded back out)."""
+    db = loaded(n_shards=4)
+    oracle = loaded(n_shards=1)
+    db.flush_all()
+    oracle.flush_all()
+    for lo in range(0, KEYSPACE, 41):
+        assert db.scan(lo, 30) == oracle.scan(lo, 30), lo
+        assert db.scan_range(lo, lo + 90) == oracle.scan_range(lo, lo + 90)
+    # cross-boundary scan spanning all four shards
+    assert db.scan(0, KEYSPACE) == oracle.scan(0, KEYSPACE)
+    assert db.stats.scans == oracle.stats.scans
+    assert db.stats.scanned_records == oracle.stats.scanned_records

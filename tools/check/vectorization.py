@@ -23,11 +23,19 @@ from .base import Finding, LintPass, Source
 
 # path suffix -> function names that constitute the hot path there
 HOT_FUNCTIONS: dict[str, set[str]] = {
-    "core/runner.py": {"run_workload"},
+    "core/runner.py": {"run_workload", "_run_segment"},
     "core/shards.py": {"shard_of", "_shard_ids", "get", "put", "delete",
-                       "multi_get", "scan", "scan_range", "_fold_fanout"},
+                       "multi_get", "put_many", "scan", "scan_range",
+                       "_fold_fanout"},
     "core/scan.py": {"build_sources", "merge_scan", "_merge_two",
                      "_merge_heap", "_view_source"},
+    # batched engine read/write paths (ISSUE 8): resolution must stay
+    # columnar — only the waived stateful commit/topology loops remain
+    "core/lsm.py": {"multi_get", "put_many", "_multi_get_fallback",
+                    "_put_many_fallback", "_batch_probe_group",
+                    "_batch_view_get", "_batch_walk_levels",
+                    "_batch_probe_sst"},
+    "core/ralt.py": {"record_access_many", "record_range_access"},
 }
 
 
