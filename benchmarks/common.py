@@ -154,6 +154,19 @@ def make_obs(bench: str, force: bool = False):
     return Observability(), tp, mp
 
 
+def make_serving_obs(bench: str, force: bool = False):
+    """Serving-half twin of `make_obs`: builds a
+    `repro.obs.serving.ServingObservability` (trace + pool series +
+    token attribution) under the same `--trace`/`--metrics-out` flag
+    contract.  `finish_obs` works for both planes."""
+    from repro.obs.serving import ServingObservability
+    tp = flag_value("--trace", f"trace_{bench}.json")
+    mp = flag_value("--metrics-out", f"metrics_{bench}.json")
+    if tp is None and mp is None and not force:
+        return None, None, None
+    return ServingObservability(), tp, mp
+
+
 def finish_obs(obs, trace_path: str | None,
                metrics_path: str | None) -> None:
     """Export whatever the user asked for; prints the artifact paths."""

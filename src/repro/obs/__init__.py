@@ -42,7 +42,8 @@ from .trace import Tracer
 
 __all__ = ["Observability", "NULL_OBS", "Tracer", "MetricsRegistry",
            "LatencyHistogram", "TierLatencyHistogram", "Series",
-           "AttributionSampler", "jsonify"]
+           "AttributionSampler", "jsonify", "ServingObservability",
+           "NULL_SERVING_OBS"]
 
 
 def jsonify(obj):
@@ -160,3 +161,7 @@ class Observability:
 # enabled=False short-circuits every instrumentation site; the
 # sub-objects exist so even a buggy unguarded call is a harmless no-op.
 NULL_OBS = Observability(enabled=False)
+
+# The serving-half plane (JAX tiering components + ServeEngine) lives
+# in .serving; imported last so it can reuse this module's helpers.
+from .serving import NULL_SERVING_OBS, ServingObservability  # noqa: E402

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.transformer import decode_step, init_cache, init_params
+from ..obs.serving import NULL_SERVING_OBS
 
 
 @dataclasses.dataclass
@@ -29,6 +30,10 @@ class Request:
 
 
 class ServeEngine:
+    # Compiled-out-by-default obs plane (see repro.obs.serving).
+    _obs = NULL_SERVING_OBS
+    _obs_track = "engine"
+
     def __init__(self, cfg, params=None, *, batch: int = 8,
                  max_len: int = 512, seed: int = 0):
         self.cfg = cfg
@@ -43,31 +48,73 @@ class ServeEngine:
         self.pos = 0                    # shared position (lockstep)
         self.queue: list = []
         self.completed: list = []
+        self.steps_used = 0
+        self.starved = False            # budget expired with live work
 
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _assign(self):
+    @property
+    def requests_completed(self) -> int:
+        return len(self.completed)
+
+    def _assign(self) -> int:
+        assigned = 0
         for i in range(self.batch):
             if self.slots[i] is None and self.queue:
                 self.slots[i] = self.queue.pop(0)
+                assigned += 1
+        return assigned
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
+        state.pop("_step", None)        # jitted closure: rebuilt on load
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        cfg = self.cfg
+        self._step = jax.jit(
+            lambda c, t, p: decode_step(self.params, cfg, c, t, p))
 
     def run(self, max_steps: int = 10_000):
         """Lockstep loop: all live slots share the position counter
         (simplification: prompts are left-aligned per generation wave;
-        a production engine would use per-slot positions)."""
+        a production engine would use per-slot positions).
+
+        The step budget is no longer silent: `steps_used` counts the
+        decode-step invocations, and when `max_steps` expires with live
+        slots or queued requests the engine sets `starved`, emits a
+        traced `engine/starved` instant, and returns what completed."""
+        obs, track = self._obs, self._obs_track
+        self.steps_used = 0
+        self.starved = False
         while (self.queue or any(self.slots)) and max_steps:
-            self._assign()
+            assigned = self._assign()
             live = [r for r in self.slots if r is not None]
             if not live:
                 break
+            if obs.enabled and assigned:
+                obs.tracer.instant(track, "engine/assign",
+                                   {"assigned": assigned,
+                                    "queued": len(self.queue)})
             wave_prompt = max(len(r.prompt) for r in live)
             wave_new = max(r.max_new for r in live)
             self.cache = init_cache(self.cfg, self.batch, self.max_len)
             toks = np.zeros((self.batch,), np.int32)
+            if obs.enabled:
+                obs.tracer.begin(track, "engine/prefill",
+                                 {"live": len(live),
+                                  "prompt_len": wave_prompt})
             # teacher-forced prefill (exact; shares the decode step)
-            last_logits = None
             for t in range(wave_prompt + wave_new):
+                if obs.enabled and t == wave_prompt:
+                    obs.tracer.end(track, "engine/prefill")
+                    obs.tracer.begin(track, "engine/decode",
+                                     {"live": len(live),
+                                      "max_new": wave_new})
                 for i, r in enumerate(self.slots):
                     if r is None:
                         continue
@@ -86,10 +133,27 @@ class ServeEngine:
                         if len(r.out) >= r.max_new:
                             r.done = True
                 max_steps -= 1
+                self.steps_used += 1
                 if max_steps <= 0:
                     break
+            if obs.enabled:
+                obs.tracer.end(track)   # close prefill OR decode span
             for i, r in enumerate(self.slots):
                 if r is not None and r.done:
                     self.completed.append(r)
                     self.slots[i] = None
+        if max_steps <= 0 and (self.queue or any(self.slots)):
+            self.starved = True
+            if obs.enabled:
+                obs.tracer.instant(
+                    track, "engine/starved",
+                    {"steps_used": self.steps_used,
+                     "live_slots": sum(r is not None
+                                       for r in self.slots),
+                     "queued": len(self.queue),
+                     "completed": len(self.completed)})
+        if obs.enabled:
+            obs.tracer.counter(track, "engine",
+                               {"steps_used": self.steps_used,
+                                "completed": len(self.completed)})
         return self.completed

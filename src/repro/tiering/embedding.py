@@ -15,11 +15,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.serving import NULL_SERVING_OBS
 from .hotness import HotTracker, TrackerConfig
 from .kvcache import HBM_BW, PCIE_BW, SimClock
 
 
 class TieredEmbedding:
+    # Compiled-out-by-default obs plane (see repro.obs.serving).
+    _obs = NULL_SERVING_OBS
+    _obs_track = "emb"
+
     def __init__(self, table: np.ndarray, fast_rows: int,
                  staging_slots: int = 256):
         self.table = table                       # host (V, d)
@@ -39,6 +44,10 @@ class TieredEmbedding:
 
     def lookup(self, token_ids) -> jnp.ndarray:
         """Exact gather (resident rows from HBM, misses from host)."""
+        obs = self._obs
+        if obs.enabled:
+            t0 = self.clock.total_s
+            f0 = self.clock.flushes
         ids = np.asarray(token_ids).reshape(-1)
         slots = self.slot_of_row[ids]
         hit = slots >= 0
@@ -59,17 +68,32 @@ class TieredEmbedding:
         self.tracker.record_ids(jnp.asarray(np.unique(ids), jnp.int32))
         if len(self.staging) >= self.staging_slots:
             self.flush_promote()
+        if obs.enabled:
+            if obs.attribution:
+                obs.attr.observe(
+                    "emb", self.clock.total_s - t0, len(ids),
+                    int(miss.sum()), self.clock.flushes > f0)
+            obs.on_access()
         return jnp.asarray(out).reshape(*np.shape(token_ids), -1)
 
     def flush_promote(self):
         """Promotion by flush: hot staged rows -> HBM cache; cold
         resident rows are evicted to make room (retention keeps hot)."""
+        obs, c = self._obs, self.clock
+        if obs.enabled:
+            obs.tracer.begin(self._obs_track, "emb/flush_promote",
+                             {"staged": len(self.staging)})
+            r0, p0 = c.retained, c.promoted
         self.tracker.refresh_limits()
         hot = np.asarray(self.tracker.hot())
         scores = np.asarray(self.tracker.scores())
         want = [r for r in self.staging if hot[r]]
         self.staging.clear()
+        c.flushes += 1
         if not want:
+            if obs.enabled:
+                obs.tracer.end(self._obs_track, "emb/flush_promote",
+                               {"promoted": 0})
             return
         # evict coldest residents if needed
         if len(self.free) < len(want):
@@ -99,6 +123,22 @@ class TieredEmbedding:
             self.clock.pcie_s += (len(new_rows) * self.row_bytes
                                   / PCIE_BW)
             self.clock.promoted += len(new_rows)
+        if obs.enabled:
+            tr, track = obs.tracer, self._obs_track
+            if c.retained > r0:                       # retention pathway
+                tr.instant(track, "page/retained",
+                           {"pages": c.retained - r0})
+            if c.promoted > p0:                       # promo-by-flush
+                tr.instant(track, "page/promo_flush",
+                           {"pages": c.promoted - p0})
+            tr.end(track, "emb/flush_promote",
+                   {"promoted": c.promoted - p0})
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
+        return state
 
     def invalidate_rows(self, rows):
         for r in np.asarray(rows).reshape(-1):

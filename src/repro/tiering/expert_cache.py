@@ -14,11 +14,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.serving import NULL_SERVING_OBS
 from .hotness import HotTracker, TrackerConfig
 from .kvcache import HBM_BW, PCIE_BW, SimClock
 
 
 class ExpertCache:
+    # Compiled-out-by-default obs plane (see repro.obs.serving).
+    _obs = NULL_SERVING_OBS
+    _obs_track = "expert"
+
     def __init__(self, expert_weights: np.ndarray, fast_experts: int,
                  swap_every: int = 16):
         """expert_weights: host array (E, ...) — one blob per expert."""
@@ -43,6 +48,10 @@ class ExpertCache:
         """Record one step's router histogram (E,) and fetch weights.
         Resident experts are HBM reads; non-resident experts are
         streamed from host (PCIe) for this step and staged."""
+        obs, c = self._obs, self.clock
+        if obs.enabled:
+            t0 = c.total_s
+            s0, m0 = c.slow_hits, c.sweeps
         used = np.nonzero(expert_counts > 0)[0]
         hits = jnp.zeros(self.E, bool).at[jnp.asarray(used)].set(True)
         self.tracker.record(hits)
@@ -56,10 +65,21 @@ class ExpertCache:
         self._steps += 1
         if self._steps % self.swap_every == 0:
             self.rebalance()
+        if obs.enabled:
+            if obs.attribution:
+                obs.attr.observe("expert", c.total_s - t0, len(used),
+                                 c.slow_hits - s0, c.sweeps > m0)
+            obs.on_access()
 
     def rebalance(self):
         """Sweep: retain hot residents, demote cold ones, promote the
         hottest non-residents into freed slots."""
+        obs, c = self._obs, self.clock
+        if obs.enabled:
+            obs.tracer.begin(
+                self._obs_track, "expert/rebalance",
+                {"resident": int((self.expert_of_slot >= 0).sum())})
+            r0, d0, p0 = c.retained, c.demoted, c.promoted
         self.tracker.refresh_limits()
         scores = np.asarray(self.tracker.scores())
         hot = np.asarray(self.tracker.hot())
@@ -88,6 +108,24 @@ class ExpertCache:
                 jnp.asarray(self.host[new[:len(slots)]]))
             self.clock.pcie_s += len(slots) * self.blob_bytes / PCIE_BW
             self.clock.promoted += len(slots)
+        c.sweeps += 1
+        if obs.enabled:
+            tr, track = obs.tracer, self._obs_track
+            if c.retained > r0:                       # retention pathway
+                tr.instant(track, "page/retained",
+                           {"pages": c.retained - r0})
+            if c.promoted > p0:                       # promo-by-compaction
+                tr.instant(track, "page/promo_compaction",
+                           {"pages": c.promoted - p0})
+            tr.end(track, "expert/rebalance",
+                   {"demoted": c.demoted - d0,
+                    "promoted": c.promoted - p0})
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
+        return state
 
     def resident_fraction(self, expert_counts: np.ndarray) -> float:
         """Fraction of routed tokens whose expert is HBM-resident."""

@@ -151,10 +151,25 @@ class HotTracker:
     def __init__(self, cfg: TrackerConfig):
         self.cfg = cfg
         self.state = init_state(cfg)
+        self._build_jits()
+
+    def _build_jits(self):
+        cfg = self.cfg
         self._record = jax.jit(
             lambda s, m: record_accesses(s, m, cfg))
         self._limits = jax.jit(lambda s: update_limits(s, cfg))
         self._hot = jax.jit(lambda s: hot_mask(s, cfg))
+
+    def __getstate__(self):
+        """Jitted closures don't pickle; rebuild them on load."""
+        state = dict(self.__dict__)
+        for k in ("_record", "_limits", "_hot"):
+            state.pop(k, None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._build_jits()
 
     def record(self, hit_mask):
         self.state = self._record(self.state, hit_mask)

@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.serving import NULL_SERVING_OBS
 from .hotness import HotTracker, TrackerConfig
 
 HBM_BW = 819e9      # v5e bytes/s
@@ -67,6 +68,8 @@ class SimClock:
         self.demoted = 0
         self.retained = 0
         self.aborted = 0
+        self.sweeps = 0         # maintenance passes (sweep/rebalance)
+        self.flushes = 0        # bulk staging flushes
 
     @property
     def total_s(self):
@@ -75,6 +78,11 @@ class SimClock:
 
 class TieredKVCache:
     TIER_FAST, TIER_SLOW = 0, 1
+
+    # Observability (repro.obs.serving) is compiled out by default:
+    # class-level null plane, one attribute check per site.
+    _obs = NULL_SERVING_OBS
+    _obs_track = "kv"
 
     def __init__(self, cfg: KVTierConfig, tracker_cfg: TrackerConfig
                  | None = None, seed: int = 0):
@@ -118,6 +126,10 @@ class TieredKVCache:
     def read_pages(self, pages):
         """Gather pages for attention.  Fast pages: one device gather;
         slow pages: host fetch (PCIe-charged) + staged for promotion."""
+        obs = self._obs
+        if obs.enabled:
+            t0 = self.clock.total_s
+            m0 = self.clock.sweeps + self.clock.flushes
         pages = list(int(p) for p in pages)
         out = {}
         fast = [p for p in pages if self.tier[p] == self.TIER_FAST]
@@ -141,6 +153,12 @@ class TieredKVCache:
         self._access_count += 1
         if self._access_count % self.cfg.sweep_every == 0:
             self.sweep()
+        if obs.enabled:
+            if obs.attribution:
+                obs.attr.observe(
+                    "kv", self.clock.total_s - t0, len(pages), len(slow),
+                    self.clock.sweeps + self.clock.flushes > m0)
+            obs.on_access()
         return [out[p] for p in pages]
 
     # ------------------------------------------------------------------
@@ -167,6 +185,12 @@ class TieredKVCache:
         if self.version[page] != staged_version:      # §3.3/3.4 hazard
             self.clock.aborted += 1
             self.staging.pop(page, None)
+            if self._obs.enabled:
+                self._obs.tracer.instant(
+                    self._obs_track, "page/promo_abort",
+                    {"page": int(page),
+                     "staged_version": int(staged_version),
+                     "version": int(self.version[page])})
             return False
         occupied = self.cfg.fast_slots - len(self.free_slots)
         hot_limit = float(self.tracker.state["hot_limit"])
@@ -199,6 +223,13 @@ class TieredKVCache:
         """Scheduled maintenance (the compaction analogue): demote cold
         resident pages (retention skips hot ones), then promote hot
         staged pages into the freed slots (promotion by compaction)."""
+        obs, c = self._obs, self.clock
+        if obs.enabled:
+            obs.tracer.begin(
+                self._obs_track, "kv/sweep",
+                {"resident": int((self.page_of_slot >= 0).sum()),
+                 "staged": len(self.staging)})
+            r0, d0, p0, a0 = c.retained, c.demoted, c.promoted, c.aborted
         hot = self._hot_set()
         resident = [int(p) for p in self.page_of_slot if p >= 0]
         for p in resident:
@@ -208,16 +239,50 @@ class TieredKVCache:
                 self._demote(p)
         for p, ver in list(self.staging.items()):
             self._promote(p, ver, bool(hot[p]))
+        c.sweeps += 1
+        if obs.enabled:
+            tr, track = obs.tracer, self._obs_track
+            if c.retained > r0:                       # retention pathway
+                tr.instant(track, "page/retained",
+                           {"pages": c.retained - r0})
+            if c.promoted > p0:                       # promo-by-compaction
+                tr.instant(track, "page/promo_compaction",
+                           {"pages": c.promoted - p0})
+            tr.end(track, "kv/sweep",
+                   {"demoted": c.demoted - d0, "promoted": c.promoted - p0,
+                    "aborted": c.aborted - a0})
 
     def _maybe_flush(self):
         """Promotion by flush: staging full between sweeps."""
         if len(self.staging) < self.cfg.staging_slots:
             return
+        obs, c = self._obs, self.clock
+        if obs.enabled:
+            obs.tracer.begin(self._obs_track, "kv/staging_flush",
+                             {"staged": len(self.staging)})
+            p0, a0 = c.promoted, c.aborted
         hot = self._hot_set()
         for p, ver in list(self.staging.items()):
             self._promote(p, ver, bool(hot[p]))
         # cold staged pages are dropped (paper: cold immPC records)
         self.staging.clear()
+        c.flushes += 1
+        if obs.enabled:
+            if c.promoted > p0:                       # promo-by-flush
+                obs.tracer.instant(self._obs_track, "page/promo_flush",
+                                   {"pages": c.promoted - p0})
+            obs.tracer.end(self._obs_track, "kv/staging_flush",
+                           {"promoted": c.promoted - p0,
+                            "aborted": c.aborted - a0})
+
+    # ------------------------------------------------------------------
+    def __getstate__(self):
+        """Pickle without the obs plane (it holds closures/clock refs);
+        the class-level NULL plane reasserts itself on load."""
+        state = dict(self.__dict__)
+        state.pop("_obs", None)
+        state.pop("_obs_track", None)
+        return state
 
     # ------------------------------------------------------------------
     def fast_hit_rate(self):

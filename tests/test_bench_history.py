@@ -1,0 +1,192 @@
+"""Bench-trajectory store + comparator (PR 9, tools/bench_history):
+append-only record layout, tolerance-band policy, and the comparator
+cases the CI gate relies on — improvement passes, regression beyond
+band fails with a per-metric diff, missing-metric fails, first record
+passes with a note, wall-clock rates stay informational.
+
+The checker lives at the repo root (tools/), outside src/, so the
+tests put the repo root on sys.path themselves.
+"""
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.bench_history import (Band, Store, band_for, check_store,  # noqa: E402
+                                 compare, flatten_metrics, main)
+
+
+def payload(**overrides):
+    base = {"schema": "hotrap-bench/1", "bench": "demo",
+            "profile": "quick",
+            "results": {"cell": {"throughput": 1000.0, "sim_s": 0.5,
+                                 "hit_rate": 0.9, "identical": True,
+                                 "ops_per_s": 5000.0, "n_ops": 100}}}
+    for k, v in overrides.items():
+        base["results"]["cell"][k] = v
+    return json.loads(json.dumps(base))
+
+
+def seeded(tmp_path, n=3):
+    s = Store(str(tmp_path / "store"))
+    for i in range(n):
+        s.append(payload(), commit=f"{i:07d}")
+    return s
+
+
+# ----------------------------------------------------------------------
+# store mechanics
+# ----------------------------------------------------------------------
+def test_append_is_sequential_and_schema_checked(tmp_path):
+    s = seeded(tmp_path, 2)
+    recs = s.records("demo")
+    assert [r["seq"] for r in recs] == [1, 2]
+    assert recs[0]["schema"] == "hotrap-bench-history/1"
+    assert recs[1]["commit"] == "0000001"
+    # filenames must NOT match the gitignored BENCH_*.json pattern
+    for r in recs:
+        assert not pathlib.Path(r["_path"]).name.startswith("BENCH_")
+    with pytest.raises(ValueError, match="schema"):
+        s.append({"schema": "something-else/9", "bench": "x"})
+
+
+def test_flatten_skips_lists_and_keeps_bools():
+    m = flatten_metrics({"a": {"b": 1.5, "ok": True,
+                               "stages": [1, 2, 3]},
+                         "c": 2})
+    assert m == {"a.b": 1.5, "a.ok": 1.0, "c": 2.0}
+
+
+def test_band_policy():
+    assert band_for("cell.scalar_ops_per_s").direction == "info"
+    assert band_for("cell.throughput").direction == "higher"
+    assert band_for("cell.sim_s").direction == "lower"
+    assert band_for("cell.identical").direction == "exact"
+    assert band_for("cell.n_ops") is None          # untracked
+    assert Band(r"x$", "higher", 0.1).matches("a.x")
+
+
+# ----------------------------------------------------------------------
+# comparator cases (the CI gate's contract)
+# ----------------------------------------------------------------------
+def test_first_record_passes_with_note(tmp_path):
+    s = seeded(tmp_path, 1)
+    report = check_store(s)
+    assert report.ok
+    assert report.diffs == []
+    assert any("first-rec" in n for n in report.notes)
+
+
+def test_improvement_passes(tmp_path):
+    s = seeded(tmp_path, 3)
+    s.append(payload(throughput=1400.0, sim_s=0.4), commit="fffffff")
+    report = check_store(s)
+    assert report.ok, report.format(verbose=True)
+
+
+def test_regression_beyond_band_fails_with_diff(tmp_path):
+    s = seeded(tmp_path, 3)
+    s.append(payload(throughput=500.0,       # -50% beyond 15% band
+                     sim_s=1.5,              # +200% beyond 20% band
+                     identical=False),       # exact flip
+             commit="baaaaad")
+    report = check_store(s)
+    assert not report.ok
+    regressed = {d.metric for d in report.regressions}
+    assert regressed == {"cell.throughput", "cell.sim_s",
+                         "cell.identical"}
+    text = report.format()
+    assert "REGRESSION" in text and "cell.throughput" in text
+    assert "-50.0%" in text
+
+
+def test_small_drift_inside_band_passes(tmp_path):
+    s = seeded(tmp_path, 3)
+    s.append(payload(throughput=900.0, sim_s=0.55), commit="fffffff")
+    assert check_store(s).ok
+
+
+def test_wallclock_rates_are_informational(tmp_path):
+    s = seeded(tmp_path, 3)
+    s.append(payload(ops_per_s=100.0), commit="fffffff")   # -98%
+    report = check_store(s)
+    assert report.ok
+    infos = [d for d in report.diffs if d.metric == "cell.ops_per_s"]
+    assert len(infos) == 1 and infos[0].band.direction == "info"
+
+
+def test_missing_tracked_metric_fails(tmp_path):
+    s = seeded(tmp_path, 3)
+    p = payload()
+    del p["results"]["cell"]["throughput"]
+    s.append(p, commit="fffffff")
+    report = check_store(s)
+    assert not report.ok
+    [d] = report.regressions
+    assert d.metric == "cell.throughput"
+    assert "missing" in d.note
+
+
+def test_new_metric_has_no_baseline_and_passes(tmp_path):
+    s = seeded(tmp_path, 2)
+    s.append(payload(p99_us=120.0), commit="fffffff")
+    report = check_store(s)
+    assert report.ok
+    news = [d for d in report.diffs if d.metric == "cell.p99_us"]
+    assert len(news) == 1 and "new metric" in news[0].note
+
+
+def test_median_baseline_absorbs_one_outlier(tmp_path):
+    s = Store(str(tmp_path / "store"))
+    for thr in (1000.0, 1005.0, 20.0, 995.0):   # one bad historical run
+        s.append(payload(throughput=thr), commit="c" * 7)
+    s.append(payload(throughput=950.0), commit="fffffff")
+    assert check_store(s).ok     # median ~997.5, not dragged to 20
+
+
+def test_profiles_compared_separately(tmp_path):
+    s = Store(str(tmp_path / "store"))
+    s.append(payload(), commit="a" * 7)
+    q = payload(throughput=100.0)    # would be a -90% regression ...
+    q["profile"] = "full"            # ... but it's a different profile
+    s.append(q, commit="b" * 7)
+    report = check_store(s)
+    assert report.ok
+    assert sum("first-rec" in n for n in report.notes) == 2
+
+
+# ----------------------------------------------------------------------
+# CLI surface (what the CI bench-trend step runs)
+# ----------------------------------------------------------------------
+def test_cli_append_and_check(tmp_path, capsys):
+    loose = tmp_path / "BENCH_demo.json"
+    loose.write_text(json.dumps(payload()))
+    root = str(tmp_path / "store")
+    assert main(["--root", root, "append", str(loose),
+                 "--commit", "abc1234"]) == 0
+    assert main(["--root", root, "check"]) == 0
+    out = capsys.readouterr().out
+    assert "first-rec" in out
+    loose.write_text(json.dumps(payload(throughput=10.0)))
+    assert main(["--root", root, "append", str(loose),
+                 "--commit", "abc1235"]) == 0
+    assert main(["--root", root, "check"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_cli_check_empty_store_fails(tmp_path):
+    assert main(["--root", str(tmp_path / "nothing"), "check"]) == 1
+
+
+def test_committed_seed_store_checks_clean():
+    """The acceptance gate: the store committed at bench_history/ must
+    pass its own comparator."""
+    store = Store(str(REPO / "bench_history"))
+    assert store.benches(), "seed store is missing"
+    report = check_store(store)
+    assert report.ok, report.format(verbose=True)

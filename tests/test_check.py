@@ -32,7 +32,7 @@ def _src(path: str, code: str) -> Source:
 # ----------------------------------------------------------------------
 def test_self_test_is_green():
     checks, errors = self_test()
-    assert checks == 6
+    assert checks == 7
     assert errors == [], "\n".join(errors)
 
 
@@ -41,7 +41,7 @@ def test_fixtures_are_not_vacuous():
     # detects nothing cannot silently "succeed"
     fixture_dir = REPO / "tools" / "check" / "fixtures"
     fixtures = sorted(fixture_dir.glob("*_cases.py"))
-    assert len(fixtures) == 6
+    assert len(fixtures) == 7
     for f in fixtures:
         assert f.read_text().count("# EXPECT:") >= 2, f.name
 
@@ -174,6 +174,24 @@ def test_stats_obs_plane_is_read_only():
     assert len(out) == 1 and "never charges" in out[0].message
     # the same code outside the plane uses the public API legitimately
     assert StatsDisciplinePass().run(_src("benchmarks/x.py", code)) == []
+
+
+def test_stats_obs_serving_rule_covers_tiering():
+    code = """\
+        def sample(kv):
+            depth = len(kv.staging)  # read
+            rate = kv.clock.fast_hits / 2  # read
+            kv.clock.pcie_s += 1e-6
+            kv.tier[3] = 0
+            kv.free_slots.append(1)
+            kv.sweep()
+        """
+    # inside src/repro/obs/: charge, table stores, mutators all flagged
+    out = StatsDisciplinePass().run(_src("src/repro/obs/serving.py", code))
+    assert len(out) == 4, out
+    # the same code in a tiering component owns that state legitimately
+    assert StatsDisciplinePass().run(
+        _src("src/repro/tiering/kvcache.py", code)) == []
 
 
 def test_stats_engine_counters_owned_by_core():

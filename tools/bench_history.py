@@ -1,0 +1,367 @@
+"""Bench trajectory: an append-only store of BENCH_*.json records plus
+a regression comparator, so the smoke benches become a gated time
+series instead of loose artifacts.
+
+Store layout (committed to git — filenames deliberately do NOT match
+the gitignored ``BENCH_*.json`` pattern)::
+
+    bench_history/
+      driver/
+        0001_a2faa0c.json      # {"schema": "hotrap-bench-history/1",
+        0002_7c3fbd6.json      #  "seq": 2, "commit": "...", "record":
+      shifting_hotspot/        #  {the original hotrap-bench/1 payload}}
+        0001_a2faa0c.json
+
+Each record wraps one schema-versioned ``hotrap-bench/1`` payload with
+its sequence number and the commit it was measured at.  ``append``
+ingests the loose ``BENCH_<bench>.json`` files a smoke run leaves
+behind; ``check`` diffs the newest record per (bench, profile) against
+the trailing median of up to ``--window`` prior records, metric by
+metric, with per-metric tolerance bands.
+
+Tolerance policy
+----------------
+Not every numeric leaf is a gate.  Wall-clock rates (``*ops_per_s``)
+are machine-dependent and **informational only** — reported, never
+failed.  Simulated metrics (``throughput``, ``*_s`` walls, ``p50``/
+``p99``) and correctness booleans (``identical``) are deterministic
+modulo seeded randomness, so they get tight bands.  Unmatched leaves
+are untracked (config echoes like ``n_ops`` stay out of the gate).
+
+CLI::
+
+    python -m tools.bench_history append [paths...] [--commit SHA]
+    python -m tools.bench_history check [--window N]
+    python -m tools.bench_history list
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import re
+import subprocess
+import sys
+
+HISTORY_SCHEMA = "hotrap-bench-history/1"
+BENCH_SCHEMA = "hotrap-bench/1"
+DEFAULT_ROOT = "bench_history"
+DEFAULT_WINDOW = 5
+
+# -- tolerance policy -------------------------------------------------------
+# (regex over the flattened metric path, direction, relative tolerance)
+# direction: "higher" = drops beyond tol fail; "lower" = rises beyond tol
+# fail; "info" = report only, never fail.  First match wins; unmatched
+# numeric leaves are untracked.
+
+
+@dataclasses.dataclass(frozen=True)
+class Band:
+    pattern: str
+    direction: str          # "higher" | "lower" | "info" | "exact"
+    rel_tol: float = 0.0
+
+    def matches(self, metric: str) -> bool:
+        return re.search(self.pattern, metric) is not None
+
+
+POLICY: tuple[Band, ...] = (
+    # wall-clock rates: machine-dependent, never gate
+    Band(r"ops_per_s$", "info"),
+    Band(r"(^|\.)wall(_s)?$", "info"),
+    # wall-clock *ratios* are far more stable than the rates themselves
+    Band(r"(^|\.)speedup$", "higher", 0.50),
+    # correctness booleans must never flip off
+    Band(r"(^|\.)identical$", "exact"),
+    # simulated rates / fractions: higher is better, tight-ish
+    Band(r"(^|\.)throughput$", "higher", 0.15),
+    Band(r"hit_rate$", "higher", 0.15),
+    Band(r"resident_fraction$", "higher", 0.15),
+    Band(r"tokens_per_sim_s$", "higher", 0.15),
+    # simulated latencies / walls: lower is better
+    Band(r"p(50|90|99)(_s|_us)?$", "lower", 0.25),
+    Band(r"stall", "lower", 0.25),
+    Band(r"(^|\.)sim_s$", "lower", 0.20),
+    Band(r"pcie_s$", "lower", 0.25),
+    Band(r"hbm_s$", "lower", 0.25),
+    # data-movement totals: lower is better, loose (plan shifts move it)
+    Band(r"(promoted|demoted|migrated)_.*bytes$", "lower", 0.60),
+)
+
+
+def band_for(metric: str) -> Band | None:
+    for b in POLICY:
+        if b.matches(metric):
+            return b
+    return None
+
+
+# -- flattening -------------------------------------------------------------
+
+def flatten_metrics(results: dict, prefix: str = "") -> dict[str, float]:
+    """Numeric (and bool) leaves of a results payload as dotted paths.
+    Lists are skipped (stage breakdowns / event logs aren't gates)."""
+    out: dict[str, float] = {}
+    for k, v in results.items():
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten_metrics(v, path + "."))
+        elif isinstance(v, bool):
+            out[path] = 1.0 if v else 0.0
+        elif isinstance(v, (int, float)):
+            out[path] = float(v)
+    return out
+
+
+# -- store ------------------------------------------------------------------
+
+def current_commit() -> str:
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10).stdout.strip()
+        return sha or "unknown"
+    except Exception:
+        return "unknown"
+
+
+class Store:
+    """Append-only record store under ``root`` (one dir per bench)."""
+
+    def __init__(self, root: str = DEFAULT_ROOT):
+        self.root = root
+
+    # -- reading --
+    def benches(self) -> list[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(d for d in os.listdir(self.root)
+                      if os.path.isdir(os.path.join(self.root, d)))
+
+    def records(self, bench: str) -> list[dict]:
+        """All records for a bench, oldest first (by seq)."""
+        paths = sorted(glob.glob(
+            os.path.join(self.root, bench, "[0-9]*.json")))
+        recs = []
+        for p in paths:
+            with open(p) as f:
+                rec = json.load(f)
+            if rec.get("schema") != HISTORY_SCHEMA:
+                raise ValueError(f"{p}: bad schema {rec.get('schema')!r}")
+            rec["_path"] = p
+            recs.append(rec)
+        recs.sort(key=lambda r: r["seq"])
+        return recs
+
+    # -- writing --
+    def append(self, payload: dict, commit: str | None = None) -> str:
+        """Append one hotrap-bench/1 payload; returns the record path."""
+        if payload.get("schema") != BENCH_SCHEMA:
+            raise ValueError(
+                f"payload schema {payload.get('schema')!r}, "
+                f"expected {BENCH_SCHEMA!r}")
+        bench = payload["bench"]
+        commit = commit or current_commit()
+        bench_dir = os.path.join(self.root, bench)
+        os.makedirs(bench_dir, exist_ok=True)
+        seq = max((r["seq"] for r in self.records(bench)), default=0) + 1
+        rec = {"schema": HISTORY_SCHEMA, "seq": seq, "commit": commit,
+               "record": payload}
+        path = os.path.join(bench_dir, f"{seq:04d}_{commit[:7]}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return path
+
+    def append_file(self, json_path: str,
+                    commit: str | None = None) -> str:
+        with open(json_path) as f:
+            return self.append(json.load(f), commit)
+
+
+# -- comparator -------------------------------------------------------------
+
+@dataclasses.dataclass
+class Diff:
+    bench: str
+    profile: str
+    metric: str
+    baseline: float
+    value: float
+    band: Band
+    regressed: bool
+    note: str = ""
+
+    def format(self) -> str:
+        if self.baseline:
+            delta = (self.value - self.baseline) / abs(self.baseline)
+            pct = f"{delta:+.1%}"
+        else:
+            pct = "n/a"
+        flag = "REGRESSION" if self.regressed else (
+            "info" if self.band.direction == "info" else "ok")
+        note = f"  ({self.note})" if self.note else ""
+        return (f"  [{flag:>10}] {self.bench}/{self.profile} "
+                f"{self.metric}: {self.value:.6g} vs median "
+                f"{self.baseline:.6g} ({pct}, {self.band.direction} "
+                f"tol {self.band.rel_tol:.0%}){note}")
+
+
+@dataclasses.dataclass
+class Report:
+    diffs: list[Diff] = dataclasses.field(default_factory=list)
+    notes: list[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def regressions(self) -> list[Diff]:
+        return [d for d in self.diffs if d.regressed]
+
+    @property
+    def ok(self) -> bool:
+        return not self.regressions
+
+    def format(self, verbose: bool = False) -> str:
+        lines = list(self.notes)
+        shown = self.diffs if verbose else self.regressions
+        lines += [d.format() for d in shown]
+        n_gated = sum(1 for d in self.diffs
+                      if d.band.direction != "info")
+        lines.append(
+            f"bench-trend: {len(self.regressions)} regression(s) across "
+            f"{n_gated} gated metric(s), {len(self.diffs)} compared")
+        return "\n".join(lines)
+
+
+def _median(xs: list[float]) -> float:
+    s = sorted(xs)
+    n = len(s)
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def compare(newest: dict, trailing: list[dict]) -> list[Diff]:
+    """Diff one newest history record against trailing same-profile
+    records.  Returns one Diff per tracked metric (band-matched), plus
+    missing-metric regressions for tracked metrics that vanished."""
+    bench = newest["record"]["bench"]
+    profile = newest["record"].get("profile", "default")
+    new_m = flatten_metrics(newest["record"].get("results", {}))
+    base: dict[str, list[float]] = {}
+    for rec in trailing:
+        for k, v in flatten_metrics(
+                rec["record"].get("results", {})).items():
+            base.setdefault(k, []).append(v)
+    diffs: list[Diff] = []
+    for metric, history in sorted(base.items()):
+        band = band_for(metric)
+        if band is None:
+            continue                      # untracked (config echo)
+        med = _median(history)
+        if metric not in new_m:
+            diffs.append(Diff(bench, profile, metric, med, float("nan"),
+                              band, regressed=band.direction != "info",
+                              note="metric missing from newest record"))
+            continue
+        val = new_m[metric]
+        regressed, note = False, ""
+        if band.direction == "exact":
+            regressed = val != med
+        elif band.direction == "higher" and med > 0:
+            regressed = val < med * (1.0 - band.rel_tol)
+        elif band.direction == "lower" and med > 0:
+            regressed = val > med * (1.0 + band.rel_tol)
+        diffs.append(Diff(bench, profile, metric, med, val, band,
+                          regressed, note))
+    for metric in sorted(set(new_m) - set(base)):
+        band = band_for(metric)
+        if band is not None:
+            diffs.append(Diff(bench, profile, metric, 0.0, new_m[metric],
+                              band, regressed=False,
+                              note="new metric (no baseline)"))
+    return diffs
+
+
+def check_store(store: Store, window: int = DEFAULT_WINDOW) -> Report:
+    """Newest record per (bench, profile) vs the trailing median."""
+    report = Report()
+    for bench in store.benches():
+        recs = store.records(bench)
+        by_profile: dict[str, list[dict]] = {}
+        for r in recs:
+            by_profile.setdefault(
+                r["record"].get("profile", "default"), []).append(r)
+        for profile, prs in sorted(by_profile.items()):
+            newest, trailing = prs[-1], prs[:-1][-window:]
+            if not trailing:
+                report.notes.append(
+                    f"  [first-rec] {bench}/{profile}: seq "
+                    f"{newest['seq']} @ {newest['commit'][:7]} — no "
+                    f"baseline yet, passing")
+                continue
+            report.diffs.extend(compare(newest, trailing))
+    return report
+
+
+# -- CLI --------------------------------------------------------------------
+
+def _cmd_append(store: Store, argv: list[str]) -> int:
+    commit = None
+    paths = []
+    it = iter(argv)
+    for a in it:
+        if a == "--commit":
+            commit = next(it, None)
+        else:
+            paths.append(a)
+    if not paths:
+        paths = sorted(glob.glob("BENCH_*.json"))
+    if not paths:
+        print("bench-history append: no BENCH_*.json found", flush=True)
+        return 1
+    for p in paths:
+        dest = store.append_file(p, commit)
+        print(f"appended {p} -> {dest}", flush=True)
+    return 0
+
+
+def _cmd_check(store: Store, argv: list[str]) -> int:
+    window = DEFAULT_WINDOW
+    verbose = "--verbose" in argv
+    if "--window" in argv:
+        window = int(argv[argv.index("--window") + 1])
+    if not store.benches():
+        print(f"bench-history check: empty store at {store.root}",
+              flush=True)
+        return 1
+    report = check_store(store, window=window)
+    print(report.format(verbose=verbose), flush=True)
+    return 0 if report.ok else 1
+
+
+def _cmd_list(store: Store, argv: list[str]) -> int:
+    del argv
+    for bench in store.benches():
+        for r in store.records(bench):
+            prof = r["record"].get("profile", "default")
+            n = len(flatten_metrics(r["record"].get("results", {})))
+            print(f"{bench:<20} seq {r['seq']:>4}  {r['commit'][:7]}  "
+                  f"{prof:<8} {n} metric leaves", flush=True)
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    root = DEFAULT_ROOT
+    if "--root" in argv:
+        i = argv.index("--root")
+        root = argv[i + 1]
+        del argv[i:i + 2]
+    if not argv or argv[0] not in ("append", "check", "list"):
+        print(__doc__, flush=True)
+        return 2
+    store = Store(root)
+    return {"append": _cmd_append, "check": _cmd_check,
+            "list": _cmd_list}[argv[0]](store, argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

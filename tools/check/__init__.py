@@ -82,6 +82,10 @@ def _fixture_pairs() -> list[tuple[LintPass, str]]:
         (StatsDisciplinePass(), "stats_cases.py"),
         # fixture stands in for src/repro/obs/ (read-only rule)
         (StatsDisciplinePass(obs_dirs=("obs_cases.py",)), "obs_cases.py"),
+        # fixture stands in for src/repro/obs/serving.py (the serving
+        # half of the read-only rule: SimClock/page-table/tiering calls)
+        (StatsDisciplinePass(obs_dirs=("obs_serving_cases.py",)),
+         "obs_serving_cases.py"),
         # fixture registers its own hot functions in place of the real
         # runner/router/scan registry
         (VectorizationPass(hot={"vectorization_cases.py":

@@ -1,0 +1,52 @@
+"""Seeded violations for the `stats` pass's serving-half obs rule.
+
+Self-test data; parsed, never imported.  The self-test constructs the
+pass with ``obs_dirs=("obs_serving_cases.py",)`` so this fixture
+stands in for `src/repro/obs/serving.py`: reads of `SimClock` walls
+and pool aggregates are the plane's job and must stay clean, but any
+HBM/PCIe charge, page-table mutation, or call into the tiering
+data/maintenance plane is a violation — a sampler that promotes pages
+while observing perturbs the tiering decisions it reports on.
+"""
+
+
+def bad_sampler_charges_device_time(kv):
+    kv.clock.pcie_s += 4096 / 16e9  # EXPECT: stats
+    kv.clock.hbm_s = 0.0  # EXPECT: stats
+    kv.clock.promoted += 1  # EXPECT: stats
+    kv.clock.sweeps += 1  # EXPECT: stats
+
+
+def bad_sampler_mutates_page_table(kv, emb, page, slot):
+    kv.tier[page] = 0  # EXPECT: stats
+    kv.slot_of[page] = slot  # EXPECT: stats
+    kv.free_slots.append(slot)  # EXPECT: stats
+    kv.staging.pop(page, None)  # EXPECT: stats
+    emb.slot_of_row[3] = -1  # EXPECT: stats
+    kv.staging = {}  # EXPECT: stats
+
+
+def bad_sampler_drives_data_plane(kv, emb, expert, pages, counts):
+    kv.read_pages(pages)  # EXPECT: stats
+    kv.sweep()  # EXPECT: stats
+    kv._maybe_flush()  # EXPECT: stats
+    emb.flush_promote()  # EXPECT: stats
+    expert.rebalance()  # EXPECT: stats
+    kv.tracker.refresh_limits()  # EXPECT: stats
+
+
+def ok_read_only_component_sample(kv, series):
+    clock = kv.clock
+    hits = clock.fast_hits + clock.slow_hits
+    hit_rate = clock.fast_hits / hits if hits else 0.0
+    occupancy = (kv.cfg.fast_slots - len(kv.free_slots)) / kv.cfg.fast_slots
+    depth = float(len(kv.staging))
+    series.append(clock.total_s, hit_rate, occupancy, depth)
+    series.append(clock.promoted * kv.cfg.page_bytes, clock.pcie_s)
+    return resident_pages(kv)
+
+
+def resident_pages(kv):
+    # membership/aggregate reads of the page table are fine — only
+    # stores and in-place mutators are the component's to make
+    return int((kv.page_of_slot >= 0).sum())

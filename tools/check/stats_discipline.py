@@ -19,6 +19,16 @@ job), but it must never call the charge APIs at all — a tracer that
 charges simulated I/O while sampling would perturb the quantity it
 measures — nor touch cache/storage mutators (`access`,
 `reset_storage`, `invalidate_sstable`).
+
+The same read-only rule covers the serving half (PR 9): obs code may
+read `SimClock` walls and pool aggregates, but any store to a
+`SimClock` counter field (`hbm_s`, `pcie_s`, `promoted`, …), any
+page-table mutation (`tier`/`slot_of`/`staging`/`free_slots` stores or
+in-place method calls), and any call into the tiering data/maintenance
+plane (`read_pages`, `write_page`, `sweep`, `flush_promote`,
+`rebalance`, …) is a violation — a sampler that promotes pages or
+charges PCIe time while observing perturbs the tiering decisions it
+reports on.
 """
 from __future__ import annotations
 
@@ -33,7 +43,22 @@ STATS_OWNER_DIR = "repro/core/"
 MUTATING_METHODS = {"setdefault", "update", "clear", "pop", "popitem"}
 OBS_DIRS = ("repro/obs/",)
 OBS_FORBIDDEN_CALLS = {"rand_read", "seq_read", "seq_write", "_charge",
-                       "access", "reset_storage", "invalidate_sstable"}
+                       "access", "reset_storage", "invalidate_sstable",
+                       # serving half (PR 9): data plane + maintenance
+                       "read_pages", "write_page", "lookup", "route",
+                       "sweep", "flush_promote", "rebalance",
+                       "_promote", "_demote", "_maybe_flush",
+                       "record_ids", "refresh_limits", "invalidate_rows"}
+# SimClock counter fields: tiering components own these; obs reads only.
+SIM_CLOCK_FIELDS = {"hbm_s", "pcie_s", "fast_hits", "slow_hits",
+                    "promoted", "demoted", "retained", "aborted",
+                    "sweeps", "flushes"}
+# Page-table / pool-bookkeeping fields of the tiering components.
+PAGE_TABLE_FIELDS = {"tier", "slot_of", "page_of_slot", "free_slots",
+                     "staging", "row_of_slot", "slot_of_row", "free",
+                     "expert_of_slot", "version"}
+INPLACE_METHODS = MUTATING_METHODS | {"append", "add", "remove",
+                                      "extend", "insert", "discard"}
 
 
 class StatsDisciplinePass(LintPass):
@@ -54,6 +79,12 @@ class StatsDisciplinePass(LintPass):
         in_core = self.stats_owner_dir in src.rel
         in_obs = any(d in src.rel for d in self.obs_dirs)
         found: dict[tuple[int, str], Finding] = {}
+
+        def own_attr(value: ast.AST) -> bool:
+            """True for `self.<field>` receivers: obs code never holds a
+            tiering component as `self`, so its own arrays may reuse
+            field names (e.g. AttributionSampler's `self.tier`)."""
+            return isinstance(value, ast.Name) and value.id == "self"
 
         def report(node: ast.AST, key: str, msg: str) -> None:
             k = (node.lineno, key)
@@ -77,12 +108,34 @@ class StatsDisciplinePass(LintPass):
                            f"{verb} through '.{target.value.attr}."
                            f"{target.attr}' outside src/repro/core — Stats "
                            f"counters are engine-owned")
+                # clock.hbm_s += ... / comp.staging = ... from obs code —
+                # the serving read-only rule (PR 9)
+                if in_obs and target.attr in SIM_CLOCK_FIELDS \
+                        and not own_attr(target.value):
+                    report(target, f"clock.{target.attr}",
+                           f"{verb} to SimClock counter '{target.attr}' "
+                           f"from the observability plane — obs reads "
+                           f"clocks but never charges HBM/PCIe time")
+                elif in_obs and target.attr in PAGE_TABLE_FIELDS \
+                        and not own_attr(target.value):
+                    report(target, f"table.{target.attr}",
+                           f"{verb} to page-table field '{target.attr}' "
+                           f"from the observability plane — obs never "
+                           f"mutates tiering state")
             if isinstance(target, ast.Subscript) \
-                    and isinstance(target.value, ast.Attribute) \
-                    and target.value.attr == "by_component" \
-                    and not in_charge_owner:
-                report(target, "by_component[]",
-                       f"{verb} into by_component outside core/storage.py")
+                    and isinstance(target.value, ast.Attribute):
+                if target.value.attr == "by_component" \
+                        and not in_charge_owner:
+                    report(target, "by_component[]",
+                           f"{verb} into by_component outside "
+                           f"core/storage.py")
+                elif in_obs and target.value.attr in PAGE_TABLE_FIELDS \
+                        and not own_attr(target.value.value):
+                    report(target, f"{target.value.attr}[]",
+                           f"{verb} into page-table "
+                           f"'{target.value.attr}[...]' from the "
+                           f"observability plane — obs never mutates "
+                           f"tiering state")
 
         for node in ast.walk(src.tree):
             if isinstance(node, ast.Assign):
@@ -110,4 +163,13 @@ class StatsDisciplinePass(LintPass):
                     report(node, "by_component()",
                            f"in-place '{node.func.attr}()' on by_component "
                            f"outside core/storage.py")
+                elif in_obs and node.func.attr in INPLACE_METHODS \
+                        and isinstance(node.func.value, ast.Attribute) \
+                        and node.func.value.attr in PAGE_TABLE_FIELDS \
+                        and not own_attr(node.func.value.value):
+                    report(node, f"{node.func.value.attr}()",
+                           f"in-place '{node.func.attr}()' on page-table "
+                           f"'{node.func.value.attr}' from the "
+                           f"observability plane — obs never mutates "
+                           f"tiering state")
         return sorted(found.values(), key=lambda f: f.line)
