@@ -1,0 +1,164 @@
+"""Durability benchmark: WAL group-commit overhead + crash recovery.
+
+Two halves:
+
+* **overhead** — the identical zipfian read/write workload runs on a
+  single-node HotRAP engine with the WAL off and on (``LSMConfig.wal``,
+  core/wal.py).  The WAL charges every record to the FD device in
+  group commits (plus manifest edits on every install), so WAL-on
+  throughput is strictly lower; the ``--smoke`` gate requires it to
+  stay within 15% of WAL-off on the quick profile (``WAL_GATE``).
+
+* **recovery** — a range-partitioned cluster is driven into a live
+  repartition and killed at a deterministic crash site
+  (core/crashpoints.py), then recovered from its durable half.  The
+  smoke gate requires the crash to actually fire, recovery to serve
+  reads again, and the migration byte ledger to reconcile exactly with
+  the devices' ``component="migration"`` history.
+
+Both halves land in ``BENCH_durability.json`` for the bench-history
+trend gate.
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.core import (LSMConfig, ShardConfig, crashpoints,
+                        make_sharded_system, make_system)
+from repro.core.runner import db_key_count, load_db, run_workload
+from repro.data.workloads import KeyDist, ycsb
+
+from .common import emit, make_cfg, n_ops, write_bench_json
+
+WAL_GATE = 0.85                  # WAL-on >= 85% of WAL-off throughput
+KIB = 1024
+
+
+def throughput_pair(value_len: int = 120, seed: int = 0) -> dict:
+    """The same workload with the WAL off and on; returns RunResults."""
+    out = {}
+    for mode, wal in (("wal_off", False), ("wal_on", True)):
+        cfg = make_cfg(wal=wal)
+        db = make_system("hotrap", cfg, seed=seed)
+        nk = db_key_count(cfg, value_len)
+        load_db(db, nk, value_len, seed)
+        db.reset_storage()
+        wl = ycsb("RW", KeyDist("zipfian", nk), n_ops(), value_len, seed=7)
+        res = run_workload(db, wl, name=mode)
+        extra = ""
+        if res.durability is not None:
+            d = res.durability
+            extra = (f";wal_records={d['wal_appended_records']}"
+                     f";group_commits={d['wal_group_commits']}"
+                     f";wal_mb={d['wal_synced_bytes'] / 2 ** 20:.2f}"
+                     f";manifest_edits={d['manifest_edits']}")
+        emit(f"durability/{mode}", 1e6 / max(res.throughput, 1e-9),
+             f"thr={res.throughput:.0f}ops/s" + extra)
+        out[mode] = res
+    ratio = (out["wal_on"].throughput
+             / max(out["wal_off"].throughput, 1e-9))
+    emit("durability/wal_ratio", 0.0, f"ratio={ratio:.3f};gate={WAL_GATE}")
+    return out
+
+
+def crash_recovery_exercise(site: str = "mid-migration-stream") -> dict:
+    """Kill a cluster mid-repartition at `site`, recover, verify."""
+    cfg = LSMConfig(fd_size=512 * KIB, sd_size=4 * 1024 * KIB,
+                    target_sstable_bytes=32 * KIB,
+                    memtable_bytes=16 * KIB, block_cache_bytes=16 * KIB,
+                    checker_delay_ops=16, hotrap=True, wal=True)
+    keyspace = 800
+    scfg = ShardConfig(n_shards=4, partitioning="range",
+                       key_space=keyspace, repartition=True,
+                       repartition_interval_ops=10 ** 9,
+                       migration_records_per_op=64,
+                       memtable_floor=8 * KIB, block_cache_floor=8 * KIB)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0)
+    rng = np.random.default_rng(23)
+
+    def drive(d):
+        for k in rng.integers(0, keyspace, 3000):
+            d.put(int(k), 120)
+        assert d.repartitioner.force_split(0), "split did not start"
+        for _ in range(8000):
+            k = int(rng.integers(0, keyspace))
+            if rng.random() < 0.6:
+                d.put(k, 120)
+            else:
+                d.get(k)
+
+    crashed, rec = crashpoints.crash_recover(db, drive, site)
+    # recovery must serve reads again, and the migration ledger must
+    # reconcile exactly with the devices' history
+    served = sum(rec.get(int(k)) is not None
+                 for k in rng.integers(0, keyspace, 200))
+    rep = rec.repartitioner
+    ledger = rep.migrated_read_bytes + rep.migrated_write_bytes
+    device = 0
+    for st in rec.storages:
+        comp = st.by_component.get("migration")
+        if comp:
+            device += int(comp["read_bytes"]) + int(comp["write_bytes"])
+    info = dict(rec.recovery_info)
+    result = {"site": site, "crashed": bool(crashed),
+              "served_sample": int(served), "n_shards": rec.n_shards,
+              "migration_ledger_bytes": int(ledger),
+              "migration_device_bytes": int(device), **info}
+    emit(f"durability/recovery/{site}", 0.0,
+         f"crashed={crashed};replayed={info.get('replayed_records')};"
+         f"torn={info.get('discarded_torn')};shards={rec.n_shards}")
+    return result
+
+
+def smoke() -> None:
+    """CI tripwire (see .github/workflows/ci.yml crash-matrix)."""
+    failures = []
+    pair = throughput_pair()
+    ratio = (pair["wal_on"].throughput
+             / max(pair["wal_off"].throughput, 1e-9))
+    if ratio < WAL_GATE:
+        failures.append(f"WAL-on throughput is {ratio:.3f}x WAL-off "
+                        f"(gate {WAL_GATE}x)")
+    if not pair["wal_on"].durability or \
+            pair["wal_on"].durability["wal_group_commits"] < 1:
+        failures.append("WAL-on run recorded no group commits")
+    # the WAL must actually charge the device (component-tagged bytes),
+    # and only when enabled
+    wal_dev = pair["wal_on"].storage["components"].get("wal", {})
+    if wal_dev.get("write_bytes", 0) <= 0:
+        failures.append("WAL-on run charged no component='wal' bytes")
+    if "wal" in pair["wal_off"].storage["components"]:
+        failures.append("WAL-off run charged component='wal' bytes")
+    recov = crash_recovery_exercise()
+    if not recov["crashed"]:
+        failures.append("the armed crash site never fired")
+    if recov["served_sample"] == 0:
+        failures.append("recovered cluster served no reads")
+    if recov["migration_ledger_bytes"] != recov["migration_device_bytes"]:
+        failures.append(
+            f"migration bytes not conserved across the crash: ledger "
+            f"{recov['migration_ledger_bytes']} != device "
+            f"{recov['migration_device_bytes']}")
+    write_bench_json("durability", {**pair, "recovery": recov})
+    if failures:
+        for f in failures:
+            print(f"SMOKE FAIL: {f}", flush=True)
+        raise SystemExit(1)
+    print(f"SMOKE OK: WAL overhead {ratio:.3f}x (gate >= {WAL_GATE}), "
+          f"crash at {recov['site']} recovered {recov['n_shards']} shards, "
+          f"replayed {recov['replayed_records']} records, "
+          f"migration bytes conserved", flush=True)
+
+
+def main() -> None:
+    throughput_pair()
+    crash_recovery_exercise()
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        smoke()
+    else:
+        main()

@@ -40,9 +40,9 @@ from repro.core import LSMConfig, ShardConfig, make_sharded_system, make_system
 from repro.core.runner import db_key_count, load_db, run_workload
 from repro.data.workloads import KeyDist, ycsb
 
-from .common import (SHARD_POLICIES, emit, finish_obs, make_cfg, make_obs,
-                     n_ops, sanitize_enabled, skew_shard_config,
-                     write_bench_json)
+from .common import (SHARD_POLICIES, emit, finish_obs, flag_value,
+                     make_cfg, make_obs, n_ops, sanitize_enabled,
+                     skew_shard_config, write_bench_json)
 
 N_SHARDS = 4
 HOT_FRAC = 0.05
@@ -182,6 +182,69 @@ def equivalence_check() -> None:
         db.close()
 
 
+def crash_exercise(site: str, obs=None) -> None:
+    """``--crash-at=SITE``: drive a WAL-enabled cluster into a live
+    repartition, kill it at the named crash site (core/crashpoints.py),
+    recover from the durable half, and prove the recovered cluster still
+    serves — under the runtime sanitizer when ``--sanitize`` is on."""
+    from repro.core import crashpoints, sanitize_db
+
+    KIB = 1024
+    cfg = LSMConfig(fd_size=512 * KIB, sd_size=4 * 1024 * KIB,
+                    target_sstable_bytes=32 * KIB, memtable_bytes=16 * KIB,
+                    block_cache_bytes=16 * KIB, hotrap=True, wal=True)
+    keyspace = 800
+    scfg = ShardConfig(n_shards=N_SHARDS, partitioning="range",
+                       key_space=keyspace, repartition=True,
+                       repartition_interval_ops=10 ** 9,
+                       migration_records_per_op=32,
+                       memtable_floor=8 * KIB, block_cache_floor=8 * KIB)
+    db = make_sharded_system("hotrap", cfg, shard_cfg=scfg, seed=0,
+                             sanitize=sanitize_enabled())
+    if obs is not None:
+        obs.attach(db, name="crash")
+    rng = np.random.default_rng(29)
+
+    def drive(d):
+        for k in rng.integers(0, keyspace, 3000):
+            d.put(int(k), 120)
+        assert d.repartitioner.force_split(0), "split did not start"
+        for _ in range(8000):
+            k = int(rng.integers(0, keyspace))
+            if rng.random() < 0.6:
+                d.put(k, 120)
+            else:
+                d.get(k)
+
+    crashed, rec = crashpoints.crash_recover(db, drive, site, obs=obs)
+    assert crashed, f"armed crash site {site!r} never fired"
+    # wrap before the first read so the sanitizer's op-conservation
+    # ledger covers every post-recovery op
+    handle = (sanitize_db(rec, check_every=256) if sanitize_enabled()
+              else rec)
+    served = sum(handle.get(int(k)) is not None
+                 for k in rng.integers(0, keyspace, 200))
+    assert served > 0, "recovered cluster serves no reads"
+    rep = rec.repartitioner
+    device = sum(int(c["read_bytes"]) + int(c["write_bytes"])
+                 for st in rec.storages
+                 for c in [st.by_component.get("migration")] if c)
+    assert rep.migrated_read_bytes + rep.migrated_write_bytes == device, \
+        "migration bytes not conserved across the crash"
+    if sanitize_enabled():
+        for k in rng.integers(0, keyspace, 2000):
+            if rng.random() < 0.5:
+                handle.put(int(k), 120)
+            else:
+                handle.get(int(k))
+        handle.close()          # raises on any ref leak / divergence
+    info = dict(rec.recovery_info)
+    print(f"CRASH-RECOVERY OK: {site} fired, recovered "
+          f"{rec.n_shards} shards (replayed={info['replayed_records']}, "
+          f"torn={info['discarded_torn']}), migration bytes conserved",
+          flush=True)
+
+
 def smoke() -> None:
     """CI tripwire (see .github/workflows/ci.yml shard-smoke)."""
     failures = []
@@ -193,6 +256,9 @@ def smoke() -> None:
     obs, trace_path, metrics_path = make_obs("shifting_hotspot",
                                              force=True)
     trace_exercise(obs)
+    site = flag_value("--crash-at", "mid-migration-stream")
+    if site:
+        crash_exercise(site, obs=obs)
     results = run_walk(quick=True, obs=obs)
     thr_arb = results["arbiter"]["throughput"]
     thr_rep = results["repartition"]["throughput"]
@@ -245,6 +311,9 @@ def smoke() -> None:
 
 def main(quick: bool = False):
     obs, trace_path, metrics_path = make_obs("shifting_hotspot")
+    site = flag_value("--crash-at", "mid-migration-stream")
+    if site:
+        crash_exercise(site, obs=obs)
     run_walk(quick=quick, obs=obs)
     finish_obs(obs, trace_path, metrics_path)
 

@@ -66,6 +66,14 @@ def save(ckpt_dir: str, step: int, tree, extra: dict | None = None) -> str:
         f.flush()
         os.fsync(f.fileno())
     os.rename(tmp, final)         # atomicity point
+    # durability point: fsync the parent directory so the rename itself
+    # survives a host crash — without it the directory entry may replay
+    # as `.tmp` debris even though the data blocks are on disk
+    dfd = os.open(ckpt_dir, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
     return final
 
 

@@ -19,8 +19,24 @@ Public API:
                                 Version refcounts, stats conservation,
                                 and sampled oracle equality op by op
                                 (core/sanitize.py)
+    WriteAheadLog, Manifest, ShardDurability, ClusterDurability
+                              — durability subsystem: group-committed
+                                WAL + Version-edit manifest + cluster
+                                topology log; `TieredLSM.recover` /
+                                `ShardedTieredLSM.recover` rebuild an
+                                engine from them (core/wal.py)
+    crashpoints, CrashError   — deterministic crash injection: named
+                                sites at mid-flush/-compaction/
+                                -promotion-install/-migration-stream/
+                                -cutover plus the `crash_recover`
+                                harness (core/crashpoints.py)
 """
+from . import crashpoints                      # noqa: F401
+from .crashpoints import (CRASH_SITES, CrashError,  # noqa: F401
+                          crash_recover)
 from .lsm import LSMConfig, TieredLSM          # noqa: F401
+from .wal import (ClusterDurability, Manifest,  # noqa: F401
+                  ShardDurability, WriteAheadLog)
 from .version import GroupView, Superversion, Version  # noqa: F401
 from .ralt import RALT, RaltConfig             # noqa: F401
 from .baselines import (SYSTEMS, make_sharded_system,  # noqa: F401

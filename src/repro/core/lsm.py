@@ -56,8 +56,10 @@ import dataclasses
 import numpy as np
 
 from ..obs import NULL_OBS
+from . import crashpoints
 from .promotion import ImmutablePromotionCache, MutablePromotionCache
 from .ralt import RALT, RaltConfig
+from .wal import ShardDurability
 from .scan import MAX_KEY, MergeCounters, build_sources, merge_scan
 from .sstable import (BLOCK_BYTES, KEY_BYTES, TOMBSTONE_VLEN, SSTable,
                       merge_runs, split_into_sstables)
@@ -103,6 +105,11 @@ class LSMConfig:
     point_view_gets: bool = True         # serve gets from an *already
                                          # materialized* GroupView via one
                                          # binary search (never builds one)
+    # --- durability (core/wal.py) ---
+    wal: bool = False                    # per-shard WAL + manifest; every
+                                         # append/sync is byte-charged to
+                                         # the devices (component="wal")
+    wal_group_commit_records: int = 64   # appends per group-commit sync
 
     def level_caps(self) -> list[float]:
         """Byte capacity per level (L0 handled by count, entry is inf)."""
@@ -194,6 +201,10 @@ class TieredLSM:
     _obs = NULL_OBS
     _obs_track = "db"
 
+    # durability (core/wal.py): None unless cfg.wal — every durability
+    # site below guards on this single attribute check
+    durability = None
+
     def __init__(self, cfg: LSMConfig, storage: StorageSim | None = None,
                  seed: int = 0):
         self.cfg = cfg
@@ -210,6 +221,12 @@ class TieredLSM:
         self.block_cache = BlockCache(cfg.block_cache_bytes, BLOCK_BYTES)
         self.stats = Stats()
         self.rng = np.random.default_rng(seed)
+        self.durability = (
+            ShardDurability(self.storage, type(self), cfg, seed,
+                            cfg.wal_group_commit_records)
+            if cfg.wal else None)
+        if self.durability is not None:
+            self.durability.owner = self
         self._sid_compacted: dict[int, bool] = {}
         # --- HotRAP state ---
         self.ralt: RALT | None = None
@@ -288,6 +305,10 @@ class TieredLSM:
     def put(self, key: int, vlen: int) -> int:
         self.seq += 1
         seq = self.seq
+        if self.durability is not None:
+            # WAL before apply: the record is durable only once its
+            # group commit syncs (core/wal.py)
+            self.durability.wal.append(seq, key, vlen)
         prev = self.memtable.get(key)
         if prev is not None:
             self.memtable_bytes -= KEY_BYTES + self._vbytes(prev[1])
@@ -333,6 +354,8 @@ class TieredLSM:
               else np.ascontiguousarray(seqs, dtype=np.int64))
         self.seq = int(sq[-1])
         self.stats.puts += n
+        if self.durability is not None:
+            self._wal_append_batch(sq, ks, vl)
         op_bytes = KEY_BYTES + np.where(vl == TOMBSTONE_VLEN, 0, vl)
         limit = self.cfg.memtable_bytes
         start = 0
@@ -373,6 +396,23 @@ class TieredLSM:
                 self.seq = sl[i] - 1
             out[i] = self.put(k, vll[i])
         return out
+
+    def _wal_append_batch(self, seqs: np.ndarray, keys: np.ndarray,
+                          vlens: np.ndarray) -> None:
+        """WAL the whole batch before applying it (the `wal/append`
+        span; group commits fire inside as windows fill)."""
+        wal = self.durability.wal
+        obs = self._obs
+        if not obs.enabled:
+            wal.append_columns(seqs, keys, vlens)
+            return
+        track = self._obs_track
+        obs.tracer.begin(track, "wal/append", {"records": int(len(seqs))})
+        syncs0 = wal.syncs
+        synced = wal.append_columns(seqs, keys, vlens)
+        obs.tracer.end(track, "wal/append",
+                       {"synced_bytes": int(synced),
+                        "group_commits": wal.syncs - syncs0})
 
     def multi_get(self, keys, lat_out=None) -> list:
         """Batched point lookups: ``[(seq, vlen) | None]`` per key, in
@@ -1191,6 +1231,12 @@ class TieredLSM:
                                      {"records": len(hot),
                                       "bytes": int(sst.size_bytes)})
         self._publish(self._levels_with(0, [sst] + self.version.levels[0]))
+        if self.durability is not None:
+            self.durability.manifest.begin_edit("promotion",
+                                                self.version)
+            crashpoints.hit("mid-promotion-install", self._obs,
+                            self._obs_track)
+            self.durability.manifest.commit_edit()
         self._maybe_compact()
 
     def _newer_in_snapshot(self, key: int, seq: int,
@@ -1256,6 +1302,19 @@ class TieredLSM:
                 obs.tracer.end(self._obs_track, "flush",
                                {"bytes": int(sst.size_bytes),
                                 "vid": self.version.vid})
+            if self.durability is not None:
+                self._log_flush(int(seqs.max()))
+
+    def _log_flush(self, flushed_through: int) -> None:
+        """Durably record one flush install: a two-phase manifest edit
+        (the mid-flush crash site sits between the halves — a crash
+        leaves a torn edit and the flushed run as orphaned debris), then
+        drop the WAL prefix the committed cut covers."""
+        d = self.durability
+        d.manifest.begin_edit("flush", self.version, flushed_through)
+        crashpoints.hit("mid-flush", self._obs, self._obs_track)
+        d.manifest.commit_edit()
+        d.wal.truncate_through(d.manifest.flushed_through)
 
     # ------------------------------------------------------------------
     # compaction
@@ -1499,6 +1558,11 @@ class TieredLSM:
                 kept.sort(key=lambda s: s.min_key)
             levels[li] = kept
         self._publish(levels)
+        if self.durability is not None:
+            self.durability.manifest.begin_edit("compaction",
+                                                self.version)
+            crashpoints.hit("mid-compaction", self._obs, self._obs_track)
+            self.durability.manifest.commit_edit()
 
     # ------------------------------------------------------------------
     # clock: deferred checkers & deferred PC inserts (test hook)
@@ -1532,12 +1596,32 @@ class TieredLSM:
 
     def flush_all(self) -> None:
         """Drain memtables + pending checkers (test/benchmark helper)."""
+        if self.durability is not None:
+            # quiesce: sync the WAL tail *before* flushing, so the flush
+            # commit's truncation covers every record and a clean
+            # shutdown recovers to the exact visible state
+            self.durability.wal.sync()
         self._rotate_memtable()
         self._flush_imm_memtables()
         self._maybe_compact()
         for _, immpc in self._checker_queue:
             self._run_checker(immpc)
         self._checker_queue = []
+
+    # ------------------------------------------------------------------
+    # durability / recovery (core/wal.py, core/crashpoints.py)
+    # ------------------------------------------------------------------
+    @classmethod
+    def recover(cls, crashed: "TieredLSM", obs=None) -> "TieredLSM":
+        """Rebuild a fresh engine from ``crashed``'s durable half (its
+        WAL + manifest).  The crashed engine's in-memory state is never
+        consulted — exactly as a restarted process never sees its
+        predecessor's heap."""
+        if crashed.durability is None:
+            raise ValueError("recover() needs an engine built with "
+                             "LSMConfig(wal=True)")
+        from .wal import recover_shard
+        return recover_shard(crashed.durability, obs=obs)
 
     # ------------------------------------------------------------------
     def __getstate__(self):
@@ -1559,6 +1643,12 @@ class TieredLSM:
                                   self.storage.spec["SD"])
         if self.ralt is not None:
             self.ralt.storage = self.storage
+        if self.durability is not None:
+            # the durable half moves with the engine onto the fresh
+            # devices (its logical contents are untouched)
+            self.durability.storage = self.storage
+            self.durability.wal.storage = self.storage
+            self.durability.manifest.storage = self.storage
         self.stats = Stats()
 
     def fd_used_bytes(self) -> int:

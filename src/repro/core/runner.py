@@ -55,6 +55,9 @@ class RunResult:
                                      # end: cumulative counters since
                                      # reset_storage, events, bounds,
                                      # knobs (None when off)
+    # --- durability (core/wal.py) ---
+    durability: dict | None = None   # WAL/manifest counters + recovery
+                                     # info (None when wal off)
     # --- observability plane (PR 7) ---
     infl_fd: float = 1.0            # 1/(1-rho_FD): queueing inflation
     infl_sd: float = 1.0            # 1/(1-rho_SD): applied at quantile
@@ -106,6 +109,7 @@ class RunResult:
             "n_repartitions": self.n_repartitions,
             "migration_bytes": self.migration_bytes,
             "repartition": self.repartition,
+            "durability": self.durability,
             "latency": {
                 "p50": self.p50, "p99": self.p99, "p999": self.p999,
                 "mean": self.mean_latency,
@@ -169,6 +173,28 @@ def _live_storages(db) -> list:
     if shards is None:
         return [db.storage]
     return [s.storage for s in shards]
+
+
+def _durability_snapshot(db) -> dict | None:
+    """WAL/manifest lifetime counters for RunResult (None when the
+    engine runs without a WAL)."""
+    dur = getattr(db, "durability", None)
+    if dur is None:
+        return None
+    shards = getattr(db, "shards", None)
+    durs = ([sh.durability for sh in shards] if shards is not None
+            else [dur])
+    out = {
+        "wal_appended_records": sum(d.wal.appended_records for d in durs),
+        "wal_group_commits": sum(d.wal.syncs for d in durs),
+        "wal_synced_bytes": sum(d.wal.synced_bytes for d in durs),
+        "manifest_edits": sum(d.manifest.edits for d in durs),
+        "durable_horizon": max((d.horizon() for d in durs), default=0),
+    }
+    info = getattr(db, "recovery_info", None)
+    if info is not None:
+        out["recovery"] = dict(info)
+    return out
 
 
 def _merged_storage_snapshot(sts: list) -> dict:
@@ -460,7 +486,8 @@ def run_workload(db, wl: Workload, name: str = "?",
                         - rep0_events if rep_snap else 0),
         migration_bytes=(rep_snap["migrated_bytes"] - rep0_bytes
                          if rep_snap else 0),
-        repartition=rep_snap)
+        repartition=rep_snap,
+        durability=_durability_snapshot(db))
 
 
 def bench_system(system: str, mix: str, dist, n_ops: int, value_len: int,

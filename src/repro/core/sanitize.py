@@ -203,6 +203,17 @@ class Sanitizer:
             self._shadow_keys.append(key)
         self.shadow[key] = _DELETED
 
+    def seed_shadow(self, expected: dict) -> None:
+        """Prime the oracle with a pre-existing visible map — key ->
+        vlen, or None for a deleted key — so a *recovered* engine can be
+        wrapped and checked against the state its durable half promised
+        (crash-recovery tests fold the op log at the recovery horizon
+        into this map)."""
+        for key, vlen in expected.items():
+            if key not in self.shadow:
+                self._shadow_keys.append(key)
+            self.shadow[key] = _DELETED if vlen is None else vlen
+
     def check_get(self, key: int, got) -> None:
         want = self.shadow.get(key)
         if want is None:                   # key never written via proxy

@@ -127,9 +127,11 @@ import heapq
 import numpy as np
 
 from ..obs import NULL_OBS
+from . import crashpoints
 from .lsm import LSMConfig, Stats, TieredLSM
 from .scan import MAX_KEY
 from .sstable import KEY_BYTES, TOMBSTONE_VLEN, split_into_sstables
+from .wal import ClusterDurability, recover_shard
 
 _HASH_MULT = np.uint64(0x9E3779B97F4A7C15)
 
@@ -634,6 +636,7 @@ class Repartitioner:
                                         component="migration")
                 self.migrated_read_bytes += delta
             remaining -= take
+        crashpoints.hit("mid-migration-stream", self._obs, self._obs_track)
         job.done_records = min(job.done_records + k, job.plan_records)
         if job.done_records >= job.plan_records:
             self._cutover()
@@ -746,6 +749,16 @@ class Repartitioner:
         sh.memtable_bytes = sum(
             KEY_BYTES + (0 if vlen == TOMBSTONE_VLEN else vlen)
             for _, vlen in mem.values())
+        if sh.durability is not None:
+            # destination durability *before* the topology commit: the
+            # inherited memtable fold is WAL-seeded and synced, the run
+            # install is a committed manifest edit, and the cluster seq
+            # at build time floors the shard's recovery horizon — so
+            # recovery on either side of the cutover record sees a
+            # consistent image
+            sh.durability.wal.seed(mem)
+            sh.durability.manifest.log_edit("build", sh.version)
+            sh.durability.inherited_seq = self.router.global_seq
         for k, (seq, vlen) in mpc.items():
             sh.mpc.insert(k, seq, vlen, KEY_BYTES)
         if sh.ralt is not None:
@@ -903,6 +916,15 @@ class Repartitioner:
                         self._obs_track, "repartition/merge",
                         {"at": idx, "records": n_c})
         r._bounds = np.array(r._bounds_list, dtype=np.uint64)
+        cdur = r.durability
+        if cdur is not None:
+            # the topology record IS the migration's durable commit:
+            # torn (mid-cutover crash) ⇒ recovery lands on the previous
+            # topology and the migration is abandoned
+            cdur.begin_topology(r._bounds_list,
+                                [sh.durability.uid for sh in r.shards])
+            crashpoints.hit("mid-cutover", self._obs, self._obs_track)
+            cdur.commit_topology()
         if r.hot_budget is not None:
             r.hot_budget.retopology(np.array(shares), np.array(scales))
         elif r.scfg.hot_budget and len(r.shards) > 1:
@@ -967,6 +989,9 @@ class ShardedTieredLSM:
     _obs = NULL_OBS
     _obs_track = "cluster"
 
+    # durability (core/wal.py): None unless cfg.wal
+    durability = None
+
     def __init__(self, scfg: ShardConfig, cfg: LSMConfig,
                  factory=None, seed: int = 0, system: str | None = None):
         self.scfg = scfg
@@ -1003,16 +1028,27 @@ class ShardedTieredLSM:
         # Retired shards' Stats also fold in here (accounting
         # continuity across repartitions).
         self._corrections = Stats()
+        self.durability = None
+        if cfg.wal and all(sh.durability is not None
+                           for sh in self.shards):
+            self.durability = ClusterDurability()
+            for sh in self.shards:
+                self.durability.adopt(sh.durability)
+            # the construction topology record: the cluster exists
+            # durably from here on
+            self.durability.log_topology(
+                self._bounds_list,
+                [sh.durability.uid for sh in self.shards])
 
     def _new_shard(self) -> TieredLSM:
         seed = self._seed_counter
         self._seed_counter += 1
         if self._factory is not None:
-            return self._factory(self.shard_cfg, seed)
-        if self._system is not None:
+            sh = self._factory(self.shard_cfg, seed)
+        elif self._system is not None:
             from .baselines import make_system
-            return make_system(self._system, self.shard_cfg, seed=seed)
-        if self._had_factory:
+            sh = make_system(self._system, self.shard_cfg, seed=seed)
+        elif self._had_factory:
             # the factory did not survive pickling and no system name
             # was given: refusing beats silently building a shard of
             # the wrong engine into a mixed cluster
@@ -1021,7 +1057,14 @@ class ShardedTieredLSM:
                 "constructed ShardedTieredLSM; construct with system= "
                 "(see make_sharded_system) to repartition after a "
                 "pickle round-trip")
-        return TieredLSM(self.shard_cfg, seed=seed)
+        else:
+            sh = TieredLSM(self.shard_cfg, seed=seed)
+        # shards built after construction (repartition destinations)
+        # register with the cluster's durable half as they are born
+        cdur = getattr(self, "durability", None)
+        if cdur is not None and sh.durability is not None:
+            cdur.adopt(sh.durability)
+        return sh
 
     def __getstate__(self):
         """Pickle without the (possibly lambda) factory; unpickled
@@ -1034,6 +1077,76 @@ class ShardedTieredLSM:
         state.pop("_obs_track", None)
         state.pop("_new_shard", None)
         return state
+
+    # ------------------------------------------------------------------
+    # durability / recovery (core/wal.py, core/crashpoints.py)
+    # ------------------------------------------------------------------
+    @classmethod
+    def recover(cls, crashed: "ShardedTieredLSM",
+                obs=None) -> "ShardedTieredLSM":
+        """Rebuild a cluster from its durable half.  The last committed
+        topology record names the live shards and bounds; each shard
+        recovers from its own WAL + manifest.  A torn topology record
+        (mid-cutover crash) recovers the *previous* topology — the
+        migration is abandoned, its destination shards left as orphaned
+        debris whose device history still counts.  The migration ledger
+        reseeds from the devices' component="migration" totals so byte
+        conservation holds across the crash; soft state (hot-budget
+        shares, repartition probes) restarts cold."""
+        cdur = crashed.durability
+        if cdur is None:
+            raise ValueError("recover() needs a cluster built with "
+                             "LSMConfig(wal=True)")
+        topo, dropped = cdur.replay_topology()
+        r = cls.__new__(cls)
+        r.scfg = crashed.scfg
+        r.cfg = crashed.cfg
+        r.shard_cfg = crashed.shard_cfg
+        r._system = crashed._system
+        r._factory = None
+        r._had_factory = crashed._had_factory
+        r._seed_counter = crashed._seed_counter
+        r.durability = cdur
+        r.shards = [recover_shard(cdur.shards[uid])
+                    for uid in topo["uids"]]
+        for sh in r.shards:
+            sh.durability.retired = False
+        r._bounds_list = [int(b) for b in topo["bounds"]]
+        r._bounds = np.array(r._bounds_list, dtype=np.uint64)
+        r.global_seq = max((sh.seq for sh in r.shards), default=0)
+        n = len(r.shards)
+        r.hot_budget = (HotBudget(r.scfg, r.shards)
+                        if r.scfg.hot_budget and n > 1 else None)
+        r.repartitioner = (Repartitioner(r.scfg, r)
+                           if r.scfg.repartition else None)
+        r._ops_since_rebalance = 0
+        live = {id(sh.storage) for sh in r.shards}
+        r._retired_storages = [st for st in cdur.storages()
+                               if id(st) not in live]
+        r._corrections = Stats()
+        if r.repartitioner is not None:
+            rep = r.repartitioner
+            for st in cdur.storages():
+                comp = st.by_component.get("migration")
+                if comp:
+                    rep.migrated_read_bytes += int(comp["read_bytes"])
+                    rep.migrated_write_bytes += int(comp["write_bytes"])
+        r.recovery_info = {
+            "n_shards": n,
+            "topology_discarded": dropped,
+            "replayed_records": sum(sh.recovery_info["replayed_records"]
+                                    for sh in r.shards),
+            "discarded_torn": dropped + sum(
+                sh.recovery_info["discarded_torn"] for sh in r.shards),
+            "horizon": r.global_seq,
+        }
+        if obs is not None:
+            obs.attach(r, name="db")
+            if r._obs.enabled:
+                t = r._obs.tracer
+                t.begin(r._obs_track, "recovery")
+                t.end(r._obs_track, "recovery", dict(r.recovery_info))
+        return r
 
     @property
     def n_shards(self) -> int:

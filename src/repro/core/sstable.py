@@ -147,6 +147,15 @@ class SSTable:
         self.being_compacted = False
         self.compacted = True
 
+    def recover_placement(self, tier: str, level: int) -> None:
+        """Crash recovery (core/wal.py): the recovered manifest's
+        Version is the placement truth — re-target the table and clear
+        compaction bookkeeping a crash may have left half-advanced (a
+        live recovered table is by definition not mid-compaction)."""
+        self.retarget(tier=tier, level=level)
+        self.being_compacted = False
+        self.compacted = False
+
     def find(self, key: int) -> tuple[int, int, int] | None:
         """Returns (seq, vlen, block_idx) or None. No I/O charged here."""
         i = int(np.searchsorted(self.keys, np.uint64(key)))

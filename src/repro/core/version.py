@@ -152,6 +152,13 @@ class Version:
         return [self.levels[li] for li in range(n_fd, len(self.levels))
                 if self.levels[li]]
 
+    def sid_levels(self) -> list[list[int]]:
+        """Per-level sid lists — the durable manifest's Version-edit
+        payload (core/wal.py): sids are stable across a crash, so a
+        recovered manifest resolves them back to the same immutable
+        SSTable objects."""
+        return [[s.sid for s in lvl] for lvl in self.levels]
+
     def group_stats(self, group: str, n_fd: int) -> tuple[int, int]:
         """(records, bytes) held by one level group — sizes the pre-copy
         stream of a shard migration (core/shards.py) without building

@@ -109,6 +109,18 @@ class Tracer:
         self._push({"track": track, "name": name, "ph": "C",
                     "ts": self._ts(), "args": values})
 
+    def close_open(self, args: dict | None = None) -> int:
+        """Close every open span on every track (crash salvage: when an
+        injected crash unwinds the engine mid-span, the spans it was
+        inside ended with the process — emitting their E events keeps
+        the recovered trace stack-balanced).  Returns spans closed."""
+        closed = 0
+        for track, stack in self._depth.items():
+            while stack:
+                self.end(track, args=args)
+                closed += 1
+        return closed
+
     # -- integrity -----------------------------------------------------
     def validate(self) -> list[str]:
         """Schema self-check used by tests and ``export``: monotone

@@ -10,6 +10,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # dev dependency — see requirements-dev.txt).  Skip them cleanly.
 if importlib.util.find_spec("hypothesis") is None:
     collect_ignore = [
+        "test_crash_property.py",
         "test_lsm_correctness.py",
         "test_scoring.py",
         "test_sstable.py",

@@ -1,0 +1,330 @@
+"""Crash-recovery matrix: every registered crash site x {plain,
+sharded, sanitized} engines.
+
+Each cell runs a skewed mixed workload with the site armed, lets the
+injected crash unwind the engine, recovers from the durable half (WAL +
+manifest + topology log, core/wal.py), and asserts
+
+  * byte-exact oracle equivalence: for every key, the recovered
+    ``get``/``scan_range`` answer equals the fold of the op log at the
+    serving shard's recovery horizon — same value AND same seq;
+  * a clean runtime-sanitizer close over post-recovery traffic
+    (refcounts, migration accounting, op conservation, oracle sampling).
+
+The flagship case — recovery of an in-flight repartition — additionally
+proves zero ``Version.refs`` leaks and exact migration-byte
+conservation after a mid-cutover crash (torn topology record ⇒ the
+migration is durably abandoned) and after a committed cutover (crash
+later ⇒ the new topology recovers, destination shards serving at their
+inherited horizons).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (CRASH_SITES, LSMConfig, ShardConfig,
+                        ShardedTieredLSM, TieredLSM, crashpoints,
+                        sanitize_db)
+from repro.core.sstable import TOMBSTONE_VLEN
+
+KIB = 1024
+MIB = 1024 * 1024
+KEYSPACE = 1024
+MIGRATION_SITES = ("mid-migration-stream", "mid-cutover")
+
+
+def small_cfg(**kw):
+    # FD small enough that the cold tail of the keyspace lives on SD
+    # (so point gets feed the promotion cache), SSTable target small
+    # enough that the mPC freezes and the Checker installs promotions.
+    base = dict(wal=True, wal_group_commit_records=32,
+                fd_size=64 * KIB, sd_size=4 * MIB,
+                target_sstable_bytes=2 * KIB, memtable_bytes=8 * KIB,
+                block_cache_bytes=8 * KIB, checker_delay_ops=16,
+                hotrap=True)
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def small_scfg(**kw):
+    base = dict(n_shards=2, partitioning="range", key_space=KEYSPACE,
+                repartition=True, repartition_interval_ops=10 ** 9,
+                migration_records_per_op=64, memtable_floor=8 * KIB,
+                block_cache_floor=8 * KIB)
+    base.update(kw)
+    return ShardConfig(**base)
+
+
+def drive_phase(db, oplog, n, seed):
+    """Skewed mixed traffic; every write is appended to ``oplog`` as
+    [seq, key, vlen] with deletes logged as tombstones.
+
+    The entry is appended *before* the engine call and sealed with the
+    returned seq after: a crash that unwinds the put leaves the entry
+    provisional (seq 0), and the oracle fold resolves it to prev+1 —
+    the seq the in-flight op was (or would have been) assigned — so the
+    boundary op is judged by the horizon like any other."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        k = (int(rng.integers(0, KEYSPACE // 4)) if rng.random() < 0.7
+             else int(rng.integers(0, KEYSPACE)))
+        r = rng.random()
+        if r < 0.55:
+            v = int(rng.integers(20, 160))
+            ent = [0, k, v]
+            oplog.append(ent)
+            ent[0] = db.put(k, v)
+        elif r < 0.62:
+            ent = [0, k, TOMBSTONE_VLEN]
+            oplog.append(ent)
+            ent[0] = db.delete(k)
+        elif r < 0.95:
+            db.get(k)
+        else:
+            db.scan(k, 10)
+
+
+def read_hot_phase(db, oplog, n, seed):
+    """Read-mostly traffic over the lower half of the keyspace (whose
+    cold tail sits on SD) with writes confined to the upper quarter —
+    the shape that makes RALT promote: hot keys are read repeatedly
+    without being rewritten into FD by fresh puts."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n):
+        if rng.random() < 0.85:
+            db.get(int(rng.integers(0, KEYSPACE // 2)))
+        else:
+            k = int(rng.integers(3 * KEYSPACE // 4, KEYSPACE))
+            ent = [0, k, 64]
+            oplog.append(ent)
+            ent[0] = db.put(k, 64)
+
+
+def horizon_of(db, key):
+    if hasattr(db, "shards"):
+        return db.shards[db.shard_of(key)].durability.horizon()
+    return db.durability.horizon()
+
+
+def fold_at_horizons(rec, oplog):
+    """key -> (seq, vlen): the newest logged op on each key at or below
+    the recovered serving shard's durability horizon."""
+    exp = {}
+    prev = 0
+    for seq, k, v in oplog:
+        if seq == 0:            # provisional: the crash unwound this op
+            seq = prev + 1
+        prev = seq
+        if seq <= horizon_of(rec, k):
+            cur = exp.get(k)
+            if cur is None or seq >= cur[0]:
+                exp[k] = (seq, v)
+    return exp
+
+
+def assert_oracle(db, exp):
+    """Byte-exact equivalence of the serving state against the oracle
+    fold: same value AND same seq for every key, gets and scans."""
+    assert exp, "oracle fold is empty — the workload never became durable"
+    for k, (seq, v) in exp.items():
+        got = db.get(k)
+        if v == TOMBSTONE_VLEN:
+            assert got is None, f"deleted key {k} visible as {got}"
+        else:
+            assert got == (seq, v), \
+                f"get({k}) = {got}, oracle fold has {(seq, v)}"
+    # scan oracle: byte-exact (key, seq, vlen) triples over a window
+    lo, hi = 0, KEYSPACE // 4
+    want = sorted((k, s, v) for k, (s, v) in exp.items()
+                  if lo <= k <= hi and v != TOMBSTONE_VLEN)
+    assert db.scan_range(lo, hi) == want
+
+
+def check_recovered(rec, oplog):
+    """Wrap the recovered engine in a fresh runtime sanitizer, prime its
+    shadow with the oracle fold, sweep the full oracle *through the
+    sanitized proxy* (so op conservation holds), push fresh traffic, and
+    require a clean close."""
+    exp = fold_at_horizons(rec, oplog)
+    srec = sanitize_db(rec, check_every=128)
+    srec.sanitizer.seed_shadow(
+        {k: (None if v == TOMBSTONE_VLEN else v)
+         for k, (_, v) in exp.items()})
+    assert_oracle(srec, exp)
+    drive_phase(srec, [], 1200, seed=99)
+    report = srec.close()        # raises SanitizeError on any break
+    assert report["checks_refs"] >= 1 and report["checks_oracle"] >= 1
+    return exp
+
+
+def make_engine(kind):
+    if kind == "plain":
+        return TieredLSM(small_cfg(), seed=0)
+    db = ShardedTieredLSM(small_scfg(), small_cfg(), seed=0)
+    return sanitize_db(db, check_every=256) if kind == "sanitized" else db
+
+
+# ----------------------------------------------------------------------
+# the matrix
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("site", CRASH_SITES)
+@pytest.mark.parametrize("kind", ("plain", "sharded", "sanitized"))
+def test_crash_matrix(site, kind):
+    db = make_engine(kind)
+    sharded = kind != "plain"
+    oplog = []
+
+    def drive(d):
+        drive_phase(d, oplog, 4000, seed=1)
+        if sharded:
+            assert d.repartitioner.force_split(0)
+        read_hot_phase(d, oplog, 6000, seed=5)
+        drive_phase(d, oplog, 3000, seed=2)
+
+    crashed, rec = crashpoints.crash_recover(db, drive, site)
+    if not sharded and site in MIGRATION_SITES:
+        # a single engine has no migrations: the site is unreachable and
+        # recovery replays a clean (post-drive) durable image instead
+        assert not crashed
+    else:
+        assert crashed, f"{site} never fired on the {kind} engine"
+        assert rec.recovery_info["discarded_torn"] >= 0
+    check_recovered(rec, oplog)
+
+
+# ----------------------------------------------------------------------
+# flagship: recovery of an in-flight repartition
+# ----------------------------------------------------------------------
+def migration_device_bytes(db):
+    total = 0
+    for st in db.storages:
+        comp = st.by_component.get("migration")
+        if comp:
+            total += int(comp["read_bytes"]) + int(comp["write_bytes"])
+    return total
+
+
+def test_mid_cutover_crash_abandons_migration_cleanly():
+    """A crash inside the topology commit record recovers the OLD
+    topology with zero Version ref leaks and the migration byte ledger
+    exactly matching the devices' component="migration" history."""
+    db = ShardedTieredLSM(small_scfg(), small_cfg(), seed=0)
+    oplog = []
+
+    def drive(d):
+        drive_phase(d, oplog, 4000, seed=1)
+        assert d.repartitioner.force_split(0)
+        drive_phase(d, oplog, 9000, seed=2)
+
+    crashed, rec = crashpoints.crash_recover(db, drive, "mid-cutover")
+    assert crashed
+    assert rec.recovery_info["topology_discarded"] == 1
+    assert rec.n_shards == 2              # the split never committed
+    # zero ref leaks: each live shard holds exactly its engine pin
+    for sh in rec.shards:
+        assert sh.version.refs == 1
+    # exact migration-byte conservation across the crash (the recovered
+    # ledger reseeds from device history, orphaned destinations included)
+    rep = rec.repartitioner
+    dev = migration_device_bytes(rec)
+    assert dev > 0, "the pre-copy stream charged nothing before the crash"
+    assert rep.migrated_read_bytes + rep.migrated_write_bytes == dev
+    check_recovered(rec, oplog)
+
+
+def test_committed_cutover_recovers_new_topology():
+    """A crash *after* the topology record commits recovers the new
+    shard set; destination shards serve their inherited image at the
+    build-time horizon floor."""
+    db = ShardedTieredLSM(small_scfg(), small_cfg(), seed=0)
+    oplog = []
+
+    def drive(d):
+        drive_phase(d, oplog, 4000, seed=1)
+        assert d.repartitioner.force_split(0)
+        d.repartitioner.drain()           # cutover commits here
+        # re-arm now so the crash lands strictly after the commit
+        crashpoints.arm("mid-flush", hits=2)
+        drive_phase(d, oplog, 6000, seed=2)
+
+    crashed, rec = crashpoints.crash_recover(db, drive, "mid-flush",
+                                             hits=10 ** 9)
+    assert crashed
+    assert rec.n_shards == 3
+    assert rec.recovery_info["topology_discarded"] == 0
+    assert any(sh.durability.inherited_seq > 0 for sh in rec.shards)
+    for sh in rec.shards:
+        assert sh.version.refs == 1
+    rep = rec.repartitioner
+    assert (rep.migrated_read_bytes + rep.migrated_write_bytes
+            == migration_device_bytes(rec) > 0)
+    check_recovered(rec, oplog)
+
+
+# ----------------------------------------------------------------------
+# WAL / manifest mechanics
+# ----------------------------------------------------------------------
+def test_clean_shutdown_recovers_identical_state():
+    """flush_all() quiesces (final WAL sync); recovery then reproduces
+    every visible record byte-exactly, with zero torn records."""
+    db = TieredLSM(small_cfg(), seed=0)
+    oplog = []
+    drive_phase(db, oplog, 5000, seed=7)
+    db.flush_all()
+    before = {k: db.get(k) for _, k, _ in oplog}
+    rec = TieredLSM.recover(db)
+    assert rec.recovery_info["discarded_torn"] == 0
+    assert rec.seq == db.seq
+    for k, want in before.items():
+        assert rec.get(k) == want
+
+
+def test_torn_wal_tail_is_discarded_and_counted():
+    cfg = small_cfg(wal_group_commit_records=64)
+    db = TieredLSM(cfg, seed=0)
+    for i in range(64):
+        db.put(i, 32)                     # exactly one full group commit
+    for i in range(10):
+        db.put(1000 + i, 32)              # buffered, never synced
+    assert db.durability.wal.durable_seq == 64
+    rec = TieredLSM.recover(db)
+    assert rec.recovery_info["discarded_torn"] == 10
+    assert rec.get(5) == (6, 32)
+    assert rec.get(1005) is None          # torn tail: durably lost
+
+
+def test_flush_truncates_wal_prefix():
+    db = TieredLSM(small_cfg(), seed=0)
+    drive_phase(db, [], 4000, seed=3)
+    db.flush_all()
+    wal = db.durability.wal
+    ft = db.durability.manifest.flushed_through
+    assert ft > 0
+    assert all(seq > ft for seq, _, _ in wal._synced)
+
+
+def test_group_commit_is_deterministic():
+    def run():
+        db = TieredLSM(small_cfg(), seed=0)
+        drive_phase(db, [], 3000, seed=11)
+        w = db.durability.wal
+        return (w.appended_records, w.syncs, w.synced_bytes,
+                db.durability.manifest.edits)
+    assert run() == run()
+
+
+def test_recover_without_wal_refuses():
+    db = TieredLSM(small_cfg(wal=False), seed=0)
+    with pytest.raises(ValueError):
+        TieredLSM.recover(db)
+    cl = ShardedTieredLSM(small_scfg(), small_cfg(wal=False), seed=0)
+    with pytest.raises(ValueError):
+        ShardedTieredLSM.recover(cl)
+
+
+def test_arm_validates_site_names():
+    with pytest.raises(ValueError):
+        crashpoints.arm("mid-nap")
+    crashpoints.arm("mid-flush", hits=3)
+    assert crashpoints.armed() == {"mid-flush": 3}
+    crashpoints.disarm()
+    assert crashpoints.armed() == {}

